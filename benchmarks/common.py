@@ -1,0 +1,33 @@
+"""Shared benchmark scaffolding: result caching + trimmed DSE settings.
+
+The paper's DSEs ran on 80-100 Xeon threads; this container has ONE core,
+so benchmarks use (a) cached results under results/bench_*.json, (b) a
+two-phase DSE (T-Map screening pass over the full grid, SA refinement on
+the shortlist) and (c) reduced SA iteration counts.  Every deviation is
+printed with the result it affects.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def cached(name: str, fn: Callable[[], Dict], force: bool = False) -> Dict:
+    RESULTS.mkdir(exist_ok=True)
+    path = RESULTS / f"bench_{name}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    t0 = time.time()
+    out = fn()
+    out["_wall_s"] = time.time() - t0
+    path.write_text(json.dumps(out, indent=1, default=float))
+    return out
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

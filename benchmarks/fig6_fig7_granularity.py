@@ -1,0 +1,119 @@
+"""Fig. 6 + Fig. 7: chiplet-granularity and core-granularity sweeps at a
+fixed compute budget, plus optima under four optimization objectives.
+
+Paper insights to validate:
+  (6a) moderate chiplet partitioning ~= monolithic EDP at lower/similar MC;
+       overly fine partitions hurt MC *and* EDP simultaneously.
+  (6b) EDP improves as cores shrink (more cores) then regresses; MC rises
+       monotonically with core count.
+  (7)  optima under MC/E/D exponent variations differ in cores + chiplets.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.dse import DSEConfig, evaluate_candidate, grid_candidates
+from repro.core.hw import ArchConfig
+from repro.core.sa import SAConfig
+from repro.core.workloads import transformer
+
+from .common import cached
+
+TOPS = 128.0
+
+
+def _chiplet_sweep() -> List[Dict]:
+    """Fix a good 64-core config; sweep the cut granularity."""
+    rows = []
+    workloads = {"TF": transformer()}
+    cfg = DSEConfig(batch=64, sa=SAConfig(iters=1200, seed=0))
+    for xcut, ycut in ((1, 1), (2, 1), (2, 2), (4, 2), (4, 4), (8, 8)):
+        arch = ArchConfig(x_cores=8, y_cores=8, xcut=xcut, ycut=ycut,
+                          noc_bw=32, d2d_bw=16, dram_bw=128, glb_kb=2048,
+                          macs_per_core=1024)
+        pt = evaluate_candidate(arch, workloads, cfg)
+        rows.append({"chiplets": arch.n_chiplets, "mc": pt.mc,
+                     "E": pt.energy_j, "D": pt.delay_s, "edp": pt.edp,
+                     "label": arch.label()})
+        print(f"[fig6a] {arch.n_chiplets:3d} chiplets: MC=${pt.mc:.0f} "
+              f"EDP={pt.edp:.3e}", flush=True)
+    return rows
+
+
+def _core_sweep() -> List[Dict]:
+    """Fix total TOPS; sweep MAC/core (fewer, fatter cores <-> many thin)."""
+    rows = []
+    workloads = {"TF": transformer()}
+    cfg = DSEConfig(batch=64, sa=SAConfig(iters=1200, seed=0))
+    for macs, (x, y) in ((8192, (4, 2)), (4096, (4, 4)), (2048, (8, 4)),
+                         (1024, (8, 8)), (512, (16, 8))):
+        arch = ArchConfig(x_cores=x, y_cores=y, xcut=2, ycut=1,
+                          noc_bw=32, d2d_bw=16, dram_bw=128, glb_kb=2048,
+                          macs_per_core=macs)
+        pt = evaluate_candidate(arch, workloads, cfg)
+        rows.append({"cores": arch.n_cores, "macs": macs, "mc": pt.mc,
+                     "E": pt.energy_j, "D": pt.delay_s, "edp": pt.edp})
+        print(f"[fig6b] {arch.n_cores:3d} cores x {macs:5d} MACs: "
+              f"MC=${pt.mc:.0f} EDP={pt.edp:.3e}", flush=True)
+    return rows
+
+
+def _objective_sweep() -> List[Dict]:
+    """Fig. 7: best arch under four (alpha, beta, gamma) objectives."""
+    workloads = {"TF": transformer()}
+    cands = grid_candidates(
+        TOPS, mac_options=(1024, 2048, 4096), cut_options=(1, 2, 4),
+        dram_per_tops=(1.0,), noc_options=(32, 64), d2d_ratio=(0.5,),
+        glb_options=(2048, 4096))
+    rows = []
+    for name, (a, b, c) in (("MC*E*D", (1, 1, 1)), ("E*D", (0, 1, 1)),
+                            ("MC*E", (1, 1, 0)), ("MC*D", (1, 0, 1))):
+        cfg = DSEConfig(alpha=a, beta=b, gamma=c, batch=64,
+                        sa=SAConfig(iters=800, seed=0))
+        from repro.core.dse import run_dse
+        screen = run_dse(cands, workloads, cfg, use_sa=False)
+        refined = run_dse([p.arch for p in screen[:6]], workloads, cfg,
+                          use_sa=True)
+        best = refined[0]
+        rows.append({"objective": name, "arch": best.arch.label(),
+                     "chiplets": best.arch.n_chiplets,
+                     "cores": best.arch.n_cores, "mc": best.mc,
+                     "E": best.energy_j, "D": best.delay_s})
+        print(f"[fig7] {name:8s} -> {best.arch.label()}", flush=True)
+    return rows
+
+
+def _run() -> Dict:
+    return {"chiplet_sweep": _chiplet_sweep(),
+            "core_sweep": _core_sweep(),
+            "objectives": _objective_sweep()}
+
+
+def main(force: bool = False) -> Dict:
+    data = cached("fig6_fig7", _run, force)
+    ch = data["chiplet_sweep"]
+    mono = next(r for r in ch if r["chiplets"] == 1)
+    moderate = min((r for r in ch if 2 <= r["chiplets"] <= 4),
+                   key=lambda r: r["edp"])
+    finest = max(ch, key=lambda r: r["chiplets"])
+    print(f"[fig6a] monolithic EDP={mono['edp']:.3e} MC=${mono['mc']:.0f} | "
+          f"moderate({moderate['chiplets']}) EDP={moderate['edp']:.3e} "
+          f"MC=${moderate['mc']:.0f} | finest({finest['chiplets']}) "
+          f"EDP={finest['edp']:.3e} MC=${finest['mc']:.0f}")
+    print(f"[fig6a] moderate-vs-mono EDP penalty: "
+          f"{(moderate['edp'] / mono['edp'] - 1) * 100:+.1f}% "
+          f"(paper: 'nearly no loss'); finest is worse on BOTH axes: "
+          f"{finest['edp'] > moderate['edp'] and finest['mc'] > moderate['mc']}")
+    cs = data["core_sweep"]
+    mcs = [r["mc"] for r in sorted(cs, key=lambda r: r["cores"])]
+    print(f"[fig6b] MC rises with cores: {all(b >= a * 0.98 for a, b in zip(mcs, mcs[1:]))}")
+    best_cores = min(cs, key=lambda r: r["edp"])["cores"]
+    print(f"[fig6b] EDP-optimal core count: {best_cores} "
+          f"(U-shape: interior optimum = "
+          f"{best_cores not in (min(r['cores'] for r in cs), max(r['cores'] for r in cs))})")
+    return data
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Space-size table (paper Sec. IV-B), SA/evaluator throughput, kernel
+micro-benchmarks (interpret-mode correctness + measured wall time)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import space_size_lower_bound, tangram_space_upper_bound
+from repro.core.evaluator import Evaluator
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import simba_arch
+from repro.core.sa import SAConfig, sa_optimize
+from repro.core.tangram import tangram_map
+from repro.core.workloads import transformer
+
+from .common import cached
+
+
+def space_size() -> Dict:
+    import math
+    rows = []
+    for n, m in ((4, 16), (8, 36), (12, 64), (16, 100)):
+        ours = space_size_lower_bound(n, m)       # arbitrary-precision int
+        theirs = tangram_space_upper_bound(n, m)
+        lo, lt = math.log10(ours), math.log10(theirs)
+        rows.append({"N": n, "M": m, "ours_log10": lo, "tangram_log10": lt})
+        print(f"[space] N={n:3d} M={m:3d}: ours 1e{lo:.0f} "
+              f"vs tangram 1e{lt:.1f}")
+    return {"rows": rows}
+
+
+def sa_throughput() -> Dict:
+    arch = simba_arch()
+    g = transformer()
+    groups = partition_graph(g, arch, 64)
+    ev = Evaluator(arch, g)
+    init = tangram_map(groups, g, arch)
+    # warm caches
+    sa_optimize(g, arch, groups, 64, SAConfig(iters=50, seed=0),
+                init=init, evaluator=ev)
+    iters = 1000
+    t0 = time.time()
+    sa_optimize(g, arch, groups, 64, SAConfig(iters=iters, seed=1),
+                init=init, evaluator=ev)
+    dt = time.time() - t0
+    print(f"[sa] {iters / dt:.0f} SA iters/s ({dt / iters * 1e3:.2f} ms/iter) "
+          f"on {g.name} x {arch.label()}")
+    return {"iters_per_s": iters / dt, "ms_per_iter": dt / iters * 1e3}
+
+
+def kernel_bench() -> Dict:
+    from repro.kernels import ops, ref
+    out = {}
+    rng = np.random.default_rng(0)
+    # flash attention (interpret mode on CPU: correctness-grade timing only)
+    B, H, S, D = 1, 4, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    o = ops.flash_attention(q, k, v, bq=128, bk=128)
+    o.block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        ops.flash_attention(q, k, v, bq=128, bk=128).block_until_ready()
+    flops = 4 * B * H * S * S * D
+    dt = (time.time() - t0) / 3
+    out["flash_attention"] = {"us": dt * 1e6, "gflops_workload": flops / 1e9}
+    print(f"[kern] flash_attention interp: {dt*1e3:.1f} ms "
+          f"({flops/1e9:.2f} GFLOP workload)")
+    # tiled matmul
+    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    ops.matmul(a, b).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        ops.matmul(a, b).block_until_ready()
+    dt = (time.time() - t0) / 3
+    out["tiled_matmul"] = {"us": dt * 1e6,
+                           "gflops_workload": 2 * 512**3 / 1e9}
+    print(f"[kern] tiled_matmul interp: {dt*1e3:.1f} ms")
+    return out
+
+
+def main(force: bool = False) -> Dict:
+    return cached("misc", lambda: {"space": space_size(),
+                                   "sa": sa_throughput(),
+                                   "kernels": kernel_bench()}, force)
+
+
+if __name__ == "__main__":
+    main()

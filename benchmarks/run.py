@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one entry per paper table/figure.
+
+``python -m benchmarks.run [--force] [--only fig5,...]``
+prints a ``name,us_per_call,derived`` CSV summary at the end.  Results are
+cached under results/bench_*.json (delete or --force to recompute).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from .common import csv_line
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    lines = []
+
+    def run(name, fn, derived_fn):
+        if only and name not in only:
+            return
+        t0 = time.time()
+        data = fn(force=args.force)
+        us = data.get("_wall_s", time.time() - t0) * 1e6
+        lines.append(csv_line(name, us, derived_fn(data)))
+
+    from . import (fig5_overall, fig6_fig7_granularity, fig8_reuse,
+                   fig9_heatmap, misc_bench, table1_dse)
+
+    run("fig5_overall", fig5_overall.main,
+        lambda d: (f"perf_x={d['summary']['perf_x']:.2f};"
+                   f"eff_x={d['summary']['eff_x']:.2f};"
+                   f"mc_pct={d['summary']['mc_increase_pct']:.1f}"))
+    run("table1_dse", table1_dse.main,
+        lambda d: f"best={d['best_arch'].replace(',', ';')}")
+    run("fig6_fig7", fig6_fig7_granularity.main,
+        lambda d: f"chiplet_rows={len(d['chiplet_sweep'])};"
+                  f"objectives={len(d['objectives'])}")
+    run("fig8_reuse", fig8_reuse.main,
+        lambda d: "schemes=" + ";".join(sorted(d["schemes"])))
+    run("fig9_heatmap", fig9_heatmap.main,
+        lambda d: (f"hops_pct={d['hops_reduction_pct']:.1f};"
+                   f"d2d_pct={d['d2d_reduction_pct']:.1f}"))
+    run("misc", misc_bench.main,
+        lambda d: f"sa_iters_per_s={d['sa']['iters_per_s']:.0f}")
+
+    print("\nname,us_per_call,derived")
+    for ln in lines:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Table I / Sec. VI-B: the 72-TOPS architecture DSE.
+
+Two-phase acceleration for the 1-core container (deviation from the paper's
+80-thread exhaustive SA): phase 1 screens every Table-I candidate with T-Map
+(fast analytic evaluation), phase 2 refines the best 12 with the SA mapper.
+Expected outcome: a small chiplet count (1-4), NoC >= 32 GB/s, GLB >= 2 MB —
+the neighborhood of the paper's (2, 36, 144GB/s, 32GB/s, 16GB/s, 2MB, 1024).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.dse import DSEConfig, grid_candidates, run_dse
+from repro.core.sa import SAConfig
+from repro.core.workloads import transformer
+
+from .common import cached
+
+TOPS = 72.0
+
+
+def _run() -> Dict:
+    workloads = {"TF": transformer()}
+    cands = grid_candidates(
+        TOPS,
+        mac_options=(512, 1024, 2048),
+        cut_options=(1, 2, 3, 6),
+        dram_per_tops=(1.0, 2.0),
+        noc_options=(16, 32, 64),
+        d2d_ratio=(0.5, 1.0),
+        glb_options=(1024, 2048, 4096))
+    print(f"[table1] {len(cands)} candidates (trimmed Table-I grid)")
+    cfg = DSEConfig(batch=64, sa=SAConfig(iters=1500, seed=0))
+    screen = run_dse(cands, workloads, cfg, use_sa=False)
+    short = [p.arch for p in screen[:12]]
+    refined = run_dse(short, workloads, cfg, use_sa=True, progress=True)
+    best = refined[0]
+    return {
+        "n_candidates": len(cands),
+        "screen_top5": [[p.arch.label(), p.objective] for p in screen[:5]],
+        "best_arch": best.arch.label(),
+        "best": {"mc": best.mc, "E": best.energy_j, "D": best.delay_s,
+                 "objective": best.objective},
+        "best_params": {
+            "chiplets": best.arch.n_chiplets, "cores": best.arch.n_cores,
+            "dram_bw": best.arch.dram_bw, "noc_bw": best.arch.noc_bw,
+            "d2d_bw": best.arch.d2d_bw, "glb_kb": best.arch.glb_kb,
+            "macs": best.arch.macs_per_core},
+        "refined": [[p.arch.label(), p.objective] for p in refined],
+    }
+
+
+def main(force: bool = False) -> Dict:
+    data = cached("table1_dse", _run, force)
+    bp = data["best_params"]
+    print(f"[table1] best 72-TOPS arch: {data['best_arch']} "
+          f"(paper: (2, 36, 144GB/s, 32GB/s, 16GB/s, 2MB, 1024))")
+    ok_granularity = bp["chiplets"] <= 4
+    print(f"[table1] moderate chiplet granularity found: {ok_granularity} "
+          f"({bp['chiplets']} chiplets)")
+    return data
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Mini architecture DSE (paper Table I flavor, trimmed for one CPU core):
+co-explore chiplet cut / NoC bandwidth / GLB size for a 72-TOPS budget on
+the Transformer workload and print the Pareto view.
+
+Run:  PYTHONPATH=src python examples/dse_demo.py
+"""
+
+from repro.core.dse import DSEConfig, grid_candidates, run_dse
+from repro.core.sa import SAConfig
+from repro.core.workloads import transformer
+
+
+def main() -> None:
+    cands = grid_candidates(
+        72.0, mac_options=(1024,), cut_options=(1, 2, 6),
+        dram_per_tops=(2.0,), noc_options=(16, 32), d2d_ratio=(0.5,),
+        glb_options=(1024, 2048))
+    print(f"[dse] exploring {len(cands)} candidates "
+          f"(trimmed grid; full grid in benchmarks/table1_dse.py)")
+    cfg = DSEConfig(batch=64, sa=SAConfig(iters=800, seed=0))
+    pts = run_dse(cands, {"TF": transformer()}, cfg, use_sa=True,
+                  progress=True)
+    print(f"\n{'rank':4s} {'architecture':46s} {'MC$':>7s} "
+          f"{'E(mJ)':>8s} {'D(ms)':>8s} {'MC*E*D':>10s}")
+    for i, p in enumerate(pts):
+        print(f"{i + 1:4d} {p.arch.label():46s} {p.mc:7.1f} "
+              f"{p.energy_j * 1e3:8.2f} {p.delay_s * 1e3:8.3f} "
+              f"{p.objective:10.3e}")
+    best = pts[0]
+    print(f"\n[dse] best: {best.arch.label()}  "
+          f"(paper's 72-TOPS optimum was (2, 36, 144GB/s, 32GB/s, 16GB/s, "
+          f"2MB, 1024))")
+
+
+if __name__ == "__main__":
+    main()

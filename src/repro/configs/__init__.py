@@ -1,0 +1,5 @@
+from .base import (SHAPES, ModelConfig, ShapeConfig, all_archs, cells_for,
+                   get_config, register)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config", "register",
+           "all_archs", "cells_for"]

@@ -1,0 +1,373 @@
+"""LP-SPM Analyzer: parse an LMS into core workloads + link/DRAM traffic.
+
+This is the paper's "LP SPM Analyzer" box (Fig. 4).  Given a layer group, an
+``LMS`` and an ``ArchConfig`` it produces:
+
+  * per-core compute work (MACs) and buffer footprints,
+  * per-directed-link feature-map traffic (bytes per pipeline pass) under XY
+    routing with multicast trees (cores needing *identical* data — e.g. the
+    K-partitioned consumers of one producer part — share one tree),
+  * per-DRAM-port traffic, split by interleaving when FD == 0,
+  * weight-load traffic (amortized over passes).
+
+Everything is vectorized with numpy; the router paths for all node pairs are
+precomputed per ``ArchConfig`` and cached, because the SA engine calls this
+millions of times.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .encoding import LMS, MS, Region, ifmap_region, parse_regions
+from .hw import ArchConfig
+from .workload import Graph, Layer, LayerGroup
+
+
+# ---------------------------------------------------------------------------
+# Router geometry, cached per arch signature
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RouterGrid:
+    n_nodes: int
+    n_edges: int
+    edge_is_d2d: np.ndarray          # (n_edges,) bool
+    paths: np.ndarray                # (n_nodes, n_nodes, max_len) edge ids, -1 pad
+    path_len: np.ndarray             # (n_nodes, n_nodes)
+    hops_d2d: np.ndarray             # (n_nodes, n_nodes) number of D2D edges
+
+
+def _build_grid(arch: ArchConfig) -> RouterGrid:
+    gw, gh = arch.grid_w, arch.grid_h
+    n_nodes = gw * gh
+    # directed edges: id layout [east | west | south(+y) | north(-y)]
+    n_h = (gw - 1) * gh
+    n_v = gw * (gh - 1)
+    n_edges = 2 * n_h + 2 * n_v
+
+    def east_id(x, y):  return y * (gw - 1) + x            # (x,y)->(x+1,y)
+    def west_id(x, y):  return n_h + y * (gw - 1) + (x - 1)  # (x,y)->(x-1,y)
+    def south_id(x, y): return 2 * n_h + y * gw + x        # (x,y)->(x,y+1)
+    def north_id(x, y): return 2 * n_h + n_v + (y - 1) * gw + x
+
+    is_d2d = np.zeros(n_edges, dtype=bool)
+    for y in range(gh):
+        for x in range(gw - 1):
+            d2d = arch.node_chiplet(y * gw + x) != arch.node_chiplet(y * gw + x + 1)
+            is_d2d[east_id(x, y)] = d2d
+            is_d2d[west_id(x + 1, y)] = d2d
+    for y in range(gh - 1):
+        for x in range(gw):
+            d2d = arch.node_chiplet(y * gw + x) != arch.node_chiplet((y + 1) * gw + x)
+            is_d2d[south_id(x, y)] = d2d
+            is_d2d[north_id(x, y + 1)] = d2d
+
+    max_len = (gw - 1) + (gh - 1)
+    paths = np.full((n_nodes, n_nodes, max(max_len, 1)), -1, dtype=np.int32)
+    plen = np.zeros((n_nodes, n_nodes), dtype=np.int32)
+    hops_d2d = np.zeros((n_nodes, n_nodes), dtype=np.int32)
+    for a in range(n_nodes):
+        ay, ax = divmod(a, gw)
+        for b in range(n_nodes):
+            if a == b:
+                continue
+            by, bx = divmod(b, gw)
+            e: List[int] = []
+            x, y = ax, ay
+            while x < bx:
+                e.append(east_id(x, y)); x += 1
+            while x > bx:
+                e.append(west_id(x, y)); x -= 1
+            while y < by:
+                e.append(south_id(x, y)); y += 1
+            while y > by:
+                e.append(north_id(x, y)); y -= 1
+            paths[a, b, :len(e)] = e
+            plen[a, b] = len(e)
+            hops_d2d[a, b] = int(is_d2d[e].sum()) if e else 0
+    return RouterGrid(n_nodes, n_edges, is_d2d, paths, plen, hops_d2d)
+
+
+_GRID_CACHE: Dict[Tuple, RouterGrid] = {}
+
+
+def router_grid(arch: ArchConfig) -> RouterGrid:
+    key = (arch.x_cores, arch.y_cores, arch.xcut, arch.ycut)
+    if key not in _GRID_CACHE:
+        _GRID_CACHE[key] = _build_grid(arch)
+    return _GRID_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# Analysis result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GroupAnalysis:
+    """Traffic/compute for ONE pipeline pass of one layer group."""
+    arch: ArchConfig
+    batch_unit: int
+    core_macs: np.ndarray            # (n_cores,) MACs per pass
+    edge_bytes: np.ndarray           # (n_edges,) NoC/D2D bytes per pass
+    edge_bytes_amortized: np.ndarray  # weight loads etc., already / n_passes
+    dram_bytes: np.ndarray           # (n_dram,) bytes per pass (fmap flows)
+    dram_bytes_amortized: np.ndarray  # (n_dram,) weight loads / n_passes
+    core_glb_need: np.ndarray        # (n_cores,) resident footprint bytes
+    core_in_bytes: np.ndarray        # (n_cores,) fmap bytes received per pass
+    core_out_bytes: np.ndarray       # (n_cores,) fmap bytes sent per pass
+    weight_dram_bytes_total: float   # unamortized (for energy, counted once)
+    # per-layer part tables for the intra-core engine
+    layer_parts: Dict[str, Dict[int, Region]] = field(default_factory=dict)
+
+    @property
+    def total_hops_bytes(self) -> float:
+        return float(self.edge_bytes.sum())
+
+    @property
+    def d2d_bytes(self) -> float:
+        g = router_grid(self.arch)
+        return float(self.edge_bytes[g.edge_is_d2d].sum())
+
+
+def _regions_to_array(regions: Dict[int, Region]) -> Tuple[np.ndarray, np.ndarray]:
+    cores = np.array(sorted(regions), dtype=np.int64)
+    arr = np.array([[regions[c].h0, regions[c].h1, regions[c].w0, regions[c].w1,
+                     regions[c].b0, regions[c].b1, regions[c].k0, regions[c].k1]
+                    for c in cores], dtype=np.int64)
+    return cores, arr
+
+
+def _overlap_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """(P,8) x (Q,8) region arrays -> (P,Q) overlap element counts."""
+    def axis(i):
+        lo = np.maximum(a[:, None, 2 * i], b[None, :, 2 * i])
+        hi = np.minimum(a[:, None, 2 * i + 1], b[None, :, 2 * i + 1])
+        return np.clip(hi - lo, 0, None)
+    return axis(0) * axis(1) * axis(2) * axis(3)
+
+
+class Analyzer:
+    """Stateful per-(arch, graph) analyzer; reused across SA iterations."""
+
+    def __init__(self, arch: ArchConfig, g: Graph):
+        self.arch = arch
+        self.g = g
+        self.grid = router_grid(arch)
+        self._core_nodes = np.array(
+            [arch.core_node(c) for c in range(arch.n_cores)], dtype=np.int64)
+        self._dram_nodes = np.array(
+            [arch.dram_node(d) for d in range(1, arch.n_dram + 1)], dtype=np.int64)
+
+    # -- routing helpers -----------------------------------------------------
+    def _route(self, edge_bytes: np.ndarray, src_nodes: np.ndarray,
+               dst_nodes: np.ndarray, vols: np.ndarray) -> None:
+        """Accumulate unicast volumes onto edge loads (vectorized)."""
+        mask = vols > 0
+        if not mask.any():
+            return
+        s, d, v = src_nodes[mask], dst_nodes[mask], vols[mask]
+        paths = self.grid.paths[s, d]            # (n, max_len)
+        flat = paths.reshape(-1)
+        keep = flat >= 0
+        np.add.at(edge_bytes, flat[keep],
+                  np.repeat(v, paths.shape[1])[keep])
+
+    def _route_multicast(self, edge_bytes: np.ndarray, src_node: int,
+                         dst_nodes: Sequence[int], vol: float) -> None:
+        """One producer datum to many consumers: union of XY paths, counted once."""
+        if vol <= 0 or not len(dst_nodes):
+            return
+        paths = self.grid.paths[src_node, np.asarray(dst_nodes, dtype=np.int64)]
+        edges = np.unique(paths[paths >= 0])
+        edge_bytes[edges] += vol
+
+    # -- main entry ------------------------------------------------------------
+    def analyze(self, group: LayerGroup, lms: LMS, total_batch: int) -> GroupAnalysis:
+        arch, g = self.arch, self.g
+        bu = group.batch_unit
+        n_passes = max(1, -(-total_batch // bu))
+        in_group = set(group.names)
+
+        core_macs = np.zeros(arch.n_cores)
+        edge_bytes = np.zeros(self.grid.n_edges)
+        edge_amort = np.zeros(self.grid.n_edges)
+        dram_bytes = np.zeros(arch.n_dram)
+        dram_amort = np.zeros(arch.n_dram)
+        glb_need = np.zeros(arch.n_cores)
+        core_in = np.zeros(arch.n_cores)
+        core_out = np.zeros(arch.n_cores)
+        weight_total = 0.0
+
+        regions_of: Dict[str, Dict[int, Region]] = {}
+        for name in group.names:
+            regions_of[name] = parse_regions(lms.ms[name], g.layers[name], bu)
+
+        for name in group.names:
+            lyr = g.layers[name]
+            ms = lms.ms[name]
+            regs = regions_of[name]
+            cores, rarr = _regions_to_array(regs)
+            nodes = self._core_nodes[cores]
+            bpe = lyr.bytes_per_elem
+
+            # compute: MACs proportional to ofmap share
+            elems = (rarr[:, 1] - rarr[:, 0]) * (rarr[:, 3] - rarr[:, 2]) \
+                * (rarr[:, 5] - rarr[:, 4]) * (rarr[:, 7] - rarr[:, 6])
+            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
+            np.add.at(core_macs, cores, elems * mac_per_elem)
+
+            # GLB footprint: weight slice + ofmap part (double-buffered fmaps)
+            w_share = lyr.weight_bytes() / max(1, ms.part[3]) if lyr.has_weight else 0
+            np.add.at(glb_need, cores, elems * bpe * 2 + w_share)
+
+            # ---- weights: DRAM -> core, amortized over passes ----------------
+            if lyr.has_weight:
+                w_bytes_core = np.full(len(cores), 0.0)
+                # each core holds the K-slice of its region (C,R,S full)
+                k_span = (rarr[:, 7] - rarr[:, 6])
+                w_bytes_core = k_span / max(1, lyr.K) * lyr.weight_bytes()
+                weight_total += float(w_bytes_core.sum())
+                self._dram_flow(edge_amort, dram_amort, ms.fd[1], nodes,
+                                w_bytes_core / n_passes, to_core=True)
+
+            # ---- ifmaps ------------------------------------------------------
+            preds = [p for p in g.preds(name)]
+            internal = [p for p in preds if p in in_group]
+            external = (not preds) or any(p not in in_group for p in preds)
+            for p in internal:
+                self._dep_traffic(edge_bytes, core_in, core_out,
+                                  g.layers[p], regions_of[p], lyr, regs, bu)
+            if external and ms.fd[0] >= 0:
+                # full needed ifmap from DRAM (input of DNN or previous group)
+                if_bytes = self._external_ifmap_bytes(lyr, rarr, bu) * bpe
+                self._dram_flow(edge_bytes, dram_bytes, ms.fd[0], nodes,
+                                if_bytes, to_core=True)
+                np.add.at(core_in, cores, if_bytes)
+
+            # ---- ofmaps ------------------------------------------------------
+            if ms.fd[2] >= 0:
+                of_bytes = elems * bpe
+                self._dram_flow(edge_bytes, dram_bytes, ms.fd[2], nodes,
+                                of_bytes.astype(float), to_core=False)
+                np.add.at(core_out, cores, of_bytes)
+
+        return GroupAnalysis(
+            arch=arch, batch_unit=bu, core_macs=core_macs,
+            edge_bytes=edge_bytes, edge_bytes_amortized=edge_amort,
+            dram_bytes=dram_bytes, dram_bytes_amortized=dram_amort,
+            core_glb_need=glb_need, core_in_bytes=core_in,
+            core_out_bytes=core_out, weight_dram_bytes_total=weight_total,
+            layer_parts=regions_of)
+
+    # -- pieces ---------------------------------------------------------------
+    def _external_ifmap_bytes(self, lyr: Layer, rarr: np.ndarray,
+                              bu: int) -> np.ndarray:
+        """Elements of DNN-level input each core must fetch (halo included)."""
+        s = lyr.stride
+        dh = (rarr[:, 1] - rarr[:, 0]) * s + (lyr.R - 1)
+        dw = (rarr[:, 3] - rarr[:, 2]) * s + (lyr.S - 1)
+        db = rarr[:, 5] - rarr[:, 4]
+        if lyr.kind in ("eltwise", "pool", "depthwise"):
+            dk = (rarr[:, 7] - rarr[:, 6]) * (lyr.n_inputs if lyr.kind == "eltwise" else 1)
+        elif lyr.kind == "matmul":
+            # both operands streamed: rows of A for H-range + full B operand share
+            dk = np.full(len(rarr), lyr.C, dtype=np.int64)
+            return (rarr[:, 1] - rarr[:, 0]) * db * lyr.C \
+                + (rarr[:, 7] - rarr[:, 6]) * db * lyr.C
+        else:
+            dk = np.full(len(rarr), max(1, lyr.C), dtype=np.int64)
+        return dh * dw * db * dk
+
+    def _dram_flow(self, edge_bytes: np.ndarray, dram_bytes: np.ndarray,
+                   fd: int, nodes: np.ndarray, vols: np.ndarray,
+                   to_core: bool) -> None:
+        """Route core<->DRAM volumes.  fd==0 interleaves over all ports."""
+        vols = np.asarray(vols, dtype=float)
+        if np.ndim(vols) == 0:
+            vols = np.full(len(nodes), float(vols))
+        if fd == 0:
+            share = vols / self.arch.n_dram
+            for d in range(self.arch.n_dram):
+                dn = np.full(len(nodes), self._dram_nodes[d])
+                if to_core:
+                    self._route(edge_bytes, dn, nodes, share)
+                else:
+                    self._route(edge_bytes, nodes, dn, share)
+                dram_bytes[d] += float(share.sum())
+        else:
+            d = fd - 1
+            dn = np.full(len(nodes), self._dram_nodes[d])
+            if to_core:
+                self._route(edge_bytes, dn, nodes, vols)
+            else:
+                self._route(edge_bytes, nodes, dn, vols)
+            dram_bytes[d] += float(vols.sum())
+
+    def _dep_traffic(self, edge_bytes: np.ndarray, core_in: np.ndarray,
+                     core_out: np.ndarray, prod: Layer,
+                     prod_regs: Dict[int, Region], cons: Layer,
+                     cons_regs: Dict[int, Region], bu: int) -> None:
+        """Producer->consumer on-chip flow with K-multicast grouping.
+
+        Consumers whose needed region is identical (K-partition siblings for
+        channel-contracting layers) form one multicast set per producer part.
+        """
+        p_cores, p_arr = _regions_to_array(prod_regs)
+        c_cores, c_arr = _regions_to_array(cons_regs)
+        bpe = prod.bytes_per_elem
+
+        # needed region of each consumer part, in producer-ofmap coordinates
+        need = np.empty_like(c_arr)
+        for i, cc in enumerate(c_cores):
+            r = cons_regs[cc]
+            nr = ifmap_region(cons, r, prod.K)
+            need[i] = [nr.h0, nr.h1, nr.w0, nr.w1, nr.b0, nr.b1, nr.k0, nr.k1]
+
+        ov = _overlap_matrix(p_arr, need)        # (P, Q) elems
+        if not ov.any():
+            return
+        p_nodes = self._core_nodes[p_cores]
+        c_nodes = self._core_nodes[c_cores]
+
+        contracting = cons.kind in ("conv", "fc", "matmul")
+        if contracting:
+            # group consumer parts by identical 'need' signature -> multicast
+            sig = [tuple(row) for row in need]
+            groups: Dict[Tuple, List[int]] = {}
+            for qi, s in enumerate(sig):
+                groups.setdefault(s, []).append(qi)
+            for s, qis in groups.items():
+                vols = ov[:, qis[0]].astype(float) * bpe   # same for all members
+                for pi in np.nonzero(vols)[0]:
+                    dsts = [int(c_nodes[q]) for q in qis
+                            if c_nodes[q] != p_nodes[pi]]
+                    self._route_multicast(edge_bytes, int(p_nodes[pi]),
+                                          dsts, float(vols[pi]))
+                    core_out[p_cores[pi]] += vols[pi] * (1 if dsts else 0)
+                    for q in qis:
+                        if c_nodes[q] != p_nodes[pi]:
+                            core_in[c_cores[q]] += vols[pi]
+        else:
+            vols = ov.astype(float) * bpe
+            same = p_nodes[:, None] == c_nodes[None, :]
+            vols_off = np.where(same, 0.0, vols)
+            P, Q = vols.shape
+            self._route(edge_bytes,
+                        np.repeat(p_nodes, Q), np.tile(c_nodes, P),
+                        vols_off.reshape(-1))
+            np.add.at(core_out, p_cores, vols_off.sum(axis=1))
+            np.add.at(core_in, c_cores, vols_off.sum(axis=0))
+
+
+def d2d_hop_stats(arch: ArchConfig, analyses: Sequence[GroupAnalysis]) -> Dict[str, float]:
+    """Totals used by the Fig. 9 style reporting."""
+    grid = router_grid(arch)
+    tot = sum(float(a.edge_bytes.sum()) for a in analyses)
+    d2d = sum(float(a.edge_bytes[grid.edge_is_d2d].sum()) for a in analyses)
+    return {"total_hop_bytes": tot, "d2d_hop_bytes": d2d,
+            "d2d_fraction": d2d / tot if tot else 0.0}

@@ -1,0 +1,111 @@
+"""Bridge: Gemini LMS mappings -> JAX device placements.
+
+The paper's encoding is hardware-agnostic: ``CG_i`` is an ordered set of
+*cores*.  On the TPU side cores are chips of a mesh.  ``lms_to_plan`` turns
+an explored LMS into a ``MeshPlan``: contiguous pipeline *stages* (groups of
+layers sharing a device set) with each stage's device list and a per-layer
+``PartitionSpec``-style factorization derived from ``Part``.
+
+``plan_for_model`` runs the whole Gemini engine (DP graph partition + SA)
+on an LM architecture's layer graph against an abstract accelerator whose
+geometry mirrors the mesh (chips = cores, pods = chiplets, ICI = NoC,
+DCI = D2D), then bridges the result.  runtime/pipeline.py executes a plan on
+real devices.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .encoding import LMS
+from .evaluator import Evaluator
+from .graph_partition import partition_graph
+from .hw import ArchConfig, Tech, TECH_12NM
+from .sa import Mapping, SAConfig, sa_optimize
+from .workload import Graph, LayerGroup
+
+
+# TPU-flavored constants for the abstract model (chips as cores).  Energies
+# are per byte moved on ICI/DCI links; silicon-cost fields are reused to
+# price chips+hosts (MC in $ still, but per-chip).
+TECH_TPUPOD = Tech(
+    name="tpu-pod",
+    e_mac=0.15e-12, e_glb_byte=0.8e-12, e_noc_hop_byte=0.4e-12,
+    e_d2d_byte=6.0e-12, e_dram_byte=25e-12,
+    a_mac=0.0, a_glb_kb=0.0, a_core_fixed=0.0, a_d2d_fixed=0.0,
+    a_d2d_per_gbps=0.0, a_io_die_fixed=0.0, a_dram_phy_per_gbps=0.0,
+    c_silicon_mm2=0.0, yield_unit=1.0, area_unit_mm2=1.0,
+    c_dram_die=0.0, dram_die_bw=1.0, f_scale=1.0, yield_package=1.0,
+    c_package_mono_mm2=0.0)
+
+
+def mesh_as_arch(x_chips: int = 16, y_chips: int = 16, pods_x: int = 1,
+                 ici_gbps: float = 50.0, dci_gbps: float = 6.25,
+                 hbm_gbps: float = 819.0) -> ArchConfig:
+    """An ArchConfig whose geometry mirrors a TPU mesh: chips as cores,
+    pods as chiplets, ICI as NoC links, inter-pod DCI as D2D."""
+    return ArchConfig(
+        x_cores=x_chips * pods_x, y_cores=y_chips, xcut=pods_x, ycut=1,
+        noc_bw=ici_gbps, d2d_bw=dci_gbps, dram_bw=hbm_gbps * 2,
+        glb_kb=16 * 1024 * 1024 // 1024,   # 16 GB HBM as the "GLB"
+        macs_per_core=98_500,              # 197 TFLOP/s bf16 @ 1 GHz, 2 op/MAC
+        freq_ghz=1.0, n_dram=2, tech=TECH_TPUPOD)
+
+
+@dataclass
+class StagePlan:
+    layers: Tuple[str, ...]
+    devices: Tuple[int, ...]          # flat device indices into the mesh
+    # per-layer Part factors: dict layer -> (ph, pw, pb, pk)
+    parts: Dict[str, Tuple[int, int, int, int]] = field(default_factory=dict)
+
+
+@dataclass
+class MeshPlan:
+    stages: List[StagePlan]
+    batch_unit: int
+    cost_delay_s: float = 0.0
+    cost_energy_j: float = 0.0
+
+    def stage_of(self, layer: str) -> int:
+        for i, st in enumerate(self.stages):
+            if layer in st.layers:
+                return i
+        raise KeyError(layer)
+
+
+def lms_to_plan(mapping: Mapping, delay_s: float = 0.0,
+                energy_j: float = 0.0) -> MeshPlan:
+    """Collapse an LMS mapping into contiguous stages.
+
+    Layers of one layer group run concurrently on disjoint core sets — each
+    layer group becomes one pipeline stage whose device set is the union of
+    its CGs; Part factors ride along for intra-stage sharding.
+    """
+    stages: List[StagePlan] = []
+    bu = 1
+    for group, lms in mapping:
+        devs: List[int] = []
+        parts: Dict[str, Tuple[int, int, int, int]] = {}
+        for name in group.names:
+            ms = lms.ms[name]
+            devs.extend(ms.cg)
+            parts[name] = ms.part
+        stages.append(StagePlan(layers=tuple(group.names),
+                                devices=tuple(sorted(set(devs))),
+                                parts=parts))
+        bu = group.batch_unit
+    return MeshPlan(stages=stages, batch_unit=bu, cost_delay_s=delay_s,
+                    cost_energy_j=energy_j)
+
+
+def plan_for_graph(g: Graph, arch: ArchConfig, total_batch: int,
+                   sa_iters: int = 2000, seed: int = 0) -> MeshPlan:
+    """Full Gemini flow on an arbitrary layer graph -> MeshPlan."""
+    groups = partition_graph(g, arch, total_batch)
+    res = sa_optimize(g, arch, groups, total_batch,
+                      SAConfig(iters=sa_iters, seed=seed))
+    return lms_to_plan(res.mapping, res.delay_s, res.energy_j)

@@ -1,0 +1,159 @@
+"""Architecture x Mapping co-exploration (paper Sec. V-A, Table I).
+
+Enumerate architecture candidates exhaustively; for each candidate run the
+mapping engine (DP graph partition + SA LP-SPM) on every workload; score
+``MC^alpha * E^beta * D^gamma`` with geometric-mean E and D across workloads.
+Supports joint DSE across several compute-power targets built from one
+chiplet (paper Sec. VII-B).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .evaluator import Evaluator
+from .graph_partition import partition_graph
+from .hw import ArchConfig, TECH_12NM
+from .mc import evaluate_mc
+from .sa import Mapping, SAConfig, SAResult, sa_optimize
+from .tangram import tangram_map
+from .workload import Graph
+
+
+@dataclass
+class DSEPoint:
+    arch: ArchConfig
+    mc: float
+    energy_j: float          # geometric mean across workloads
+    delay_s: float           # geometric mean across workloads
+    objective: float
+    per_workload: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+    mappings: Dict[str, Mapping] = field(default_factory=dict)
+
+    @property
+    def edp(self) -> float:
+        return self.energy_j * self.delay_s
+
+
+@dataclass
+class DSEConfig:
+    alpha: float = 1.0        # MC exponent
+    beta: float = 1.0         # E exponent
+    gamma: float = 1.0        # D exponent
+    batch: int = 64
+    sa: SAConfig = field(default_factory=lambda: SAConfig(iters=1500))
+    keep_mappings: bool = False
+
+
+def grid_candidates(tops: float,
+                    mac_options: Sequence[int] = (512, 1024, 2048, 4096),
+                    cut_options: Sequence[int] = (1, 2, 3, 6),
+                    dram_per_tops: Sequence[float] = (0.5, 1.0, 2.0),
+                    noc_options: Sequence[float] = (8, 16, 32, 64),
+                    d2d_ratio: Sequence[float] = (0.25, 0.5, 1.0),
+                    glb_options: Sequence[int] = (256, 512, 1024, 2048, 4096),
+                    ) -> List[ArchConfig]:
+    """The paper's Table-I grid for a given total TOPS (int8, 2 ops/MAC)."""
+    out: List[ArchConfig] = []
+    for macs in mac_options:
+        n_cores = int(round(tops * 1e3 / (2 * macs)))
+        if n_cores < 1:
+            continue
+        # near-square arrangement
+        x = int(math.isqrt(n_cores))
+        while n_cores % x:
+            x -= 1
+        y, xc = n_cores // x, x
+        x_cores, y_cores = max(xc, y), min(xc, y)
+        if x_cores * y_cores != n_cores:
+            continue
+        for xcut, ycut in itertools.product(cut_options, cut_options):
+            if x_cores % xcut or y_cores % ycut:
+                continue
+            for dpt, noc, dr, glb in itertools.product(
+                    dram_per_tops, noc_options, d2d_ratio, glb_options):
+                out.append(ArchConfig(
+                    x_cores=x_cores, y_cores=y_cores, xcut=xcut, ycut=ycut,
+                    noc_bw=float(noc), d2d_bw=float(noc * dr),
+                    dram_bw=float(dpt * tops), glb_kb=glb,
+                    macs_per_core=macs))
+    return out
+
+
+def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
+                       cfg: DSEConfig, use_sa: bool = True) -> DSEPoint:
+    mc = evaluate_mc(arch).total
+    logE = logD = 0.0
+    per: Dict[str, Tuple[float, float]] = {}
+    maps: Dict[str, Mapping] = {}
+    for name, g in workloads.items():
+        groups = partition_graph(g, arch, cfg.batch)
+        ev = Evaluator(arch, g)
+        if use_sa:
+            res = sa_optimize(g, arch, groups, cfg.batch, cfg.sa, evaluator=ev)
+            E, D, mapping = res.energy_j, res.delay_s, res.mapping
+        else:
+            mapping = tangram_map(groups, g, arch)
+            r = ev.evaluate(mapping, cfg.batch)
+            E, D = r.energy_j, r.delay_s
+        per[name] = (E, D)
+        if cfg.keep_mappings:
+            maps[name] = mapping
+        logE += math.log(E)
+        logD += math.log(D)
+    n = max(1, len(workloads))
+    E = math.exp(logE / n)
+    D = math.exp(logD / n)
+    obj = (mc ** cfg.alpha) * (E ** cfg.beta) * (D ** cfg.gamma)
+    return DSEPoint(arch=arch, mc=mc, energy_j=E, delay_s=D, objective=obj,
+                    per_workload=per, mappings=maps)
+
+
+def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
+            cfg: DSEConfig, use_sa: bool = True,
+            progress: bool = False) -> List[DSEPoint]:
+    points: List[DSEPoint] = []
+    for i, arch in enumerate(candidates):
+        pt = evaluate_candidate(arch, workloads, cfg, use_sa=use_sa)
+        points.append(pt)
+        if progress:
+            print(f"[dse {i + 1}/{len(candidates)}] {arch.label()} "
+                  f"MC=${pt.mc:.0f} E={pt.energy_j:.3e}J D={pt.delay_s:.3e}s "
+                  f"obj={pt.objective:.3e}", flush=True)
+    points.sort(key=lambda p: p.objective)
+    return points
+
+
+def joint_reuse_dse(chiplet_grid: Sequence[ArchConfig],
+                    scale_factors: Sequence[int],
+                    workloads: Dict[str, Graph],
+                    cfg: DSEConfig) -> List[Tuple[ArchConfig, float]]:
+    """Paper Sec. VII-B: pick ONE chiplet; build each scale by tiling it.
+
+    ``chiplet_grid`` holds base (single-chiplet) configs; ``scale_factors``
+    multiplies the chiplet count (e.g. (1, 4) for 128/512 TOPs).  Returns
+    (base_arch, product-of-objectives) sorted ascending.
+    """
+    out: List[Tuple[ArchConfig, float]] = []
+    for base in chiplet_grid:
+        prod = 1.0
+        ok = True
+        for s in scale_factors:
+            # tile s chiplets in as-square-as-possible grid
+            sx = int(math.isqrt(s))
+            while s % sx:
+                sx -= 1
+            sy = s // sx
+            arch = base.replace(
+                x_cores=base.x_cores * sx, y_cores=base.y_cores * sy,
+                xcut=base.xcut * sx, ycut=base.ycut * sy,
+                dram_bw=base.dram_bw * s)
+            pt = evaluate_candidate(arch, workloads, cfg)
+            prod *= pt.objective
+        if ok:
+            out.append((base, prod))
+    out.sort(key=lambda t: t[1])
+    return out

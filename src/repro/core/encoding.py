@@ -1,0 +1,305 @@
+"""Layer-centric LP spatial-mapping encoding (paper Sec. IV).
+
+An ``LMS`` (LP spatial Mapping Scheme) of a layer group holds one ``MS`` per
+layer: ``MS = (Part, CG, FD)``.
+
+* ``Part = (ph, pw, pb, pk)`` — partition counts of the ofmap cube along
+  H, W, B(atch-unit) and K.  Product == len(CG).
+* ``CG`` — *ordered* tuple of core ids; cores may be anywhere on the grid
+  (non-contiguous allowed).  CGs of different layers in one group are
+  disjoint.
+* ``FD = (IF, WGT, OF)`` — DRAM endpoints; -1 implicit/absent, 0 interleaved,
+  d>0 a concrete DRAM port.
+
+The Correspondence Rule maps the partitioned workload with 4-D id
+``(h, w, b, k)`` to core ``CG[((h*pw + w)*pb + b)*pk + k]`` — row-major NID,
+exactly the paper's ``h*W*B*K + w*B*K + b*K + k``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .workload import Graph, Layer, LayerGroup
+
+
+Part = Tuple[int, int, int, int]          # (ph, pw, pb, pk)
+FD = Tuple[int, int, int]                 # (IF, WGT, OF)
+
+
+def split_points(dim: int, parts: int) -> np.ndarray:
+    """Boundaries of an approximately-equal split (np.array_split semantics).
+
+    Returns ``parts+1`` offsets; part i covers [off[i], off[i+1]).
+    """
+    if parts > dim:
+        raise ValueError(f"cannot split dim {dim} into {parts} parts")
+    base, extra = divmod(dim, parts)
+    sizes = [base + (1 if i < extra else 0) for i in range(parts)]
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+@dataclass(frozen=True)
+class MS:
+    """Mapping Scheme of one layer."""
+    part: Part
+    cg: Tuple[int, ...]
+    fd: FD
+
+    @property
+    def nc(self) -> int:
+        return len(self.cg)
+
+    def __post_init__(self):
+        ph, pw, pb, pk = self.part
+        if ph * pw * pb * pk != len(self.cg):
+            raise ValueError(
+                f"Part {self.part} product {ph*pw*pb*pk} != |CG| {len(self.cg)}")
+        if len(set(self.cg)) != len(self.cg):
+            raise ValueError("CG has duplicate cores")
+        if min(self.part) < 1:
+            raise ValueError(f"Part must be >=1, got {self.part}")
+
+    def part_index(self, h: int, w: int, b: int, k: int) -> int:
+        ph, pw, pb, pk = self.part
+        return ((h * pw + w) * pb + b) * pk + k
+
+    def core_of(self, h: int, w: int, b: int, k: int) -> int:
+        return self.cg[self.part_index(h, w, b, k)]
+
+
+@dataclass(frozen=True)
+class LMS:
+    """LP Spatial Mapping Scheme of one layer group."""
+    ms: Dict[str, MS]
+
+    def cores_used(self) -> Tuple[int, ...]:
+        out: List[int] = []
+        for m in self.ms.values():
+            out.extend(m.cg)
+        return tuple(out)
+
+    def validate(self, group: LayerGroup, g: Graph, n_cores: int,
+                 n_dram: int) -> None:
+        if set(self.ms) != set(group.names):
+            raise ValueError("LMS layers != layer-group layers")
+        seen: set = set()
+        for name in group.names:
+            m = self.ms[name]
+            lyr = g.layers[name]
+            ph, pw, pb, pk = m.part
+            if ph > lyr.H or pw > lyr.W or pb > group.batch_unit or pk > lyr.K:
+                raise ValueError(
+                    f"{name}: Part {m.part} exceeds dims "
+                    f"(H={lyr.H},W={lyr.W},B={group.batch_unit},K={lyr.K})")
+            for c in m.cg:
+                if not (0 <= c < n_cores):
+                    raise ValueError(f"{name}: core {c} out of range")
+                if c in seen:
+                    raise ValueError(f"{name}: core {c} used by two layers")
+                seen.add(c)
+            for v in m.fd:
+                if not (-1 <= v <= n_dram):
+                    raise ValueError(f"{name}: FD value {v} out of range")
+            # FD structural rules (paper Sec. IV-A)
+            if lyr.has_weight and m.fd[1] < 0:
+                raise ValueError(f"{name}: weighted layer needs WGT >= 0")
+            if not lyr.has_weight and m.fd[1] >= 0:
+                raise ValueError(f"{name}: weightless layer must have WGT=-1")
+
+
+# ---------------------------------------------------------------------------
+# Region computation (parsing an MS into per-core ofmap regions)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Region:
+    """Half-open ranges into the (H, W, B, K) ofmap cube of one layer part."""
+    h0: int; h1: int
+    w0: int; w1: int
+    b0: int; b1: int
+    k0: int; k1: int
+
+    @property
+    def elems(self) -> int:
+        return ((self.h1 - self.h0) * (self.w1 - self.w0)
+                * (self.b1 - self.b0) * (self.k1 - self.k0))
+
+    def overlap(self, other: "Region") -> int:
+        dh = min(self.h1, other.h1) - max(self.h0, other.h0)
+        dw = min(self.w1, other.w1) - max(self.w0, other.w0)
+        db = min(self.b1, other.b1) - max(self.b0, other.b0)
+        dk = min(self.k1, other.k1) - max(self.k0, other.k0)
+        if dh <= 0 or dw <= 0 or db <= 0 or dk <= 0:
+            return 0
+        return dh * dw * db * dk
+
+
+def parse_regions(m: MS, layer: Layer, batch_unit: int) -> Dict[int, Region]:
+    """Correspondence Rule: core id -> its ofmap Region."""
+    ph, pw, pb, pk = m.part
+    hs = split_points(layer.H, ph)
+    ws = split_points(layer.W, pw)
+    bs = split_points(batch_unit, pb)
+    ks = split_points(layer.K, pk)
+    out: Dict[int, Region] = {}
+    for h in range(ph):
+        for w in range(pw):
+            for b in range(pb):
+                for k in range(pk):
+                    core = m.core_of(h, w, b, k)
+                    out[core] = Region(
+                        int(hs[h]), int(hs[h + 1]), int(ws[w]), int(ws[w + 1]),
+                        int(bs[b]), int(bs[b + 1]), int(ks[k]), int(ks[k + 1]))
+    return out
+
+
+def ifmap_region(layer: Layer, r: Region, in_K: int) -> Region:
+    """Ifmap region a consumer part needs, in the *producer's ofmap* cube.
+
+    conv/fc/matmul contract over all input channels: the K-range widens to
+    the full producer K.  Spatial dims map through stride with an RxS halo.
+    eltwise/pool/depthwise are channel-wise 1:1.
+    """
+    if layer.kind in ("eltwise",):
+        return r
+    if layer.kind in ("pool", "depthwise"):
+        s = layer.stride
+        return Region(r.h0 * s, min(r.h1 * s + layer.R - 1, layer.H * s),
+                      r.w0 * s, min(r.w1 * s + layer.S - 1, layer.W * s),
+                      r.b0, r.b1, r.k0, r.k1)
+    # conv / fc / matmul: full channel contraction
+    s = layer.stride
+    h_in = layer.H * s
+    w_in = layer.W * s
+    return Region(min(r.h0 * s, h_in - 1), min(r.h1 * s + layer.R - 1, h_in),
+                  min(r.w0 * s, w_in - 1), min(r.w1 * s + layer.S - 1, w_in),
+                  r.b0, r.b1, 0, in_K)
+
+
+# ---------------------------------------------------------------------------
+# Generators: random LMS + valid Part enumeration
+# ---------------------------------------------------------------------------
+
+def factor_parts(n: int, dims: Tuple[int, int, int, int],
+                 rng: np.random.Generator) -> Part:
+    """Random 4-way factorization of ``n`` respecting per-dim caps."""
+    for _ in range(64):
+        rem = n
+        out = []
+        caps = list(dims)
+        order = rng.permutation(4)
+        ok = True
+        for i, axis in enumerate(order):
+            if i == 3:
+                f = rem
+            else:
+                divs = [d for d in range(1, min(rem, caps[axis]) + 1)
+                        if rem % d == 0]
+                if not divs:
+                    ok = False
+                    break
+                f = int(rng.choice(divs))
+            if f > caps[axis]:
+                ok = False
+                break
+            p_tmp = [1, 1, 1, 1]
+            out.append((axis, f))
+            rem //= f
+        if ok and rem == 1:
+            part = [1, 1, 1, 1]
+            for axis, f in out:
+                part[axis] = f
+            return tuple(part)  # type: ignore[return-value]
+    # fall back: all on the largest dim that fits
+    for axis in np.argsort(dims)[::-1]:
+        if dims[axis] >= n:
+            part = [1, 1, 1, 1]
+            part[axis] = n
+            return tuple(part)  # type: ignore[return-value]
+    raise ValueError(f"cannot split {n} parts over dims {dims}")
+
+
+def default_fd(layer: Layer, g: Graph, group: LayerGroup,
+               n_dram: int, rng: Optional[np.random.Generator] = None) -> FD:
+    """Structurally-valid FD: explicit endpoints where the paper requires."""
+    in_group = set(group.names)
+    preds = g.preds(layer.name)
+    succs = g.succs(layer.name)
+    pick = (lambda: int(rng.integers(0, n_dram + 1))) if rng is not None else (lambda: 0)
+    if_ = -1
+    if not preds or not any(p in in_group for p in preds):
+        if_ = pick()            # DNN input or fed from a previous group
+    wgt = pick() if layer.has_weight else -1
+    of = -1
+    if not succs or not all(s in in_group for s in succs):
+        of = pick()             # DNN output or consumed by a later group
+    return (if_, wgt, of)
+
+
+def random_lms(group: LayerGroup, g: Graph, n_cores: int, n_dram: int,
+               rng: np.random.Generator) -> LMS:
+    """Uniform-ish random point of the optimization space (for tests/SA)."""
+    n = len(group.names)
+    if n_cores < n:
+        raise ValueError("fewer cores than layers")
+    # random composition of cores over layers, each >= 1, total <= n_cores
+    sizes = np.ones(n, dtype=int)
+    budget = n_cores - n
+    extra = rng.multinomial(budget, np.ones(n) / n) if budget else np.zeros(n, int)
+    sizes = sizes + extra
+    perm = rng.permutation(n_cores)
+    ms: Dict[str, MS] = {}
+    off = 0
+    for name, nc in zip(group.names, sizes):
+        lyr = g.layers[name]
+        dims = (lyr.H, lyr.W, group.batch_unit, lyr.K)
+        # shrink nc until it factorizes over the dims
+        nc = int(nc)
+        while nc > 1:
+            try:
+                part = factor_parts(nc, dims, rng)
+                break
+            except ValueError:
+                nc -= 1
+        else:
+            part = (1, 1, 1, 1)
+        cg = tuple(int(c) for c in perm[off:off + nc])
+        off += nc
+        ms[name] = MS(part=part, cg=cg, fd=default_fd(lyr, g, group, n_dram, rng))
+    return LMS(ms=ms)
+
+
+# ---------------------------------------------------------------------------
+# Optimization-space size (paper Sec. IV-B)
+# ---------------------------------------------------------------------------
+
+def _binom(x: int, y: int) -> int:
+    from math import comb
+    if y < 0 or y > x:
+        return 0
+    return comb(x, y)
+
+
+def space_size_lower_bound(n_layers: int, n_cores: int) -> int:
+    """Paper's conservative lower bound: m! * sum_i C(N,i)*C(M-N-1,N-i-1)*4^(N-i)."""
+    from math import factorial
+    N, M = n_layers, n_cores
+    total = 0
+    for i in range(N):
+        total += _binom(N, i) * _binom(M - N - 1, N - i - 1) * 4 ** (N - i)
+    return factorial(M) * total
+
+
+def tangram_space_upper_bound(n_layers: int, n_cores: int) -> int:
+    """Tangram heuristic upper bound: N * part(M) (integer partitions)."""
+    # partition function via Euler recurrence
+    M = n_cores
+    p = [1] + [0] * M
+    for i in range(1, M + 1):
+        for j in range(i, M + 1):
+            p[j] += p[j - i]
+    return n_layers * p[M]

@@ -1,0 +1,163 @@
+"""Delay + energy evaluation of a mapped DNN (paper Sec. V-B2, SET-style).
+
+A mapped DNN is a sequence of (LayerGroup, LMS).  Per group we take the
+``GroupAnalysis`` traffic and compute
+
+  delay  = stage_time * (n_passes + pipeline_depth - 1)
+  stage_time = max( compute time on the busiest core,
+                    busiest NoC link, busiest D2D link, busiest DRAM port )
+
+(fine-grained pipelining over batch-unit passes, with fill/drain captured by
+the depth term — the Tangram/SET model).  Energy sums MACs, GLB traffic
+(from the intra-core exploration), NoC hop bytes, D2D crossing bytes and
+DRAM bytes, each times its unit energy.  GLB overcommit is penalized softly
+(spill traffic + delay multiplier) to keep the SA landscape smooth.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .analyzer import Analyzer, GroupAnalysis, router_grid
+from .encoding import LMS
+from .hw import ArchConfig
+from .intra_core import explore_intra_core
+from .workload import Graph, LayerGroup
+
+
+@dataclass
+class GroupEval:
+    delay_s: float
+    energy_j: float
+    stage_time_s: float
+    n_passes: int
+    depth: int
+    bottleneck: str
+    glb_overflow_bytes: float
+    energy_breakdown: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class EvalResult:
+    delay_s: float
+    energy_j: float
+    groups: List[GroupEval]
+    analyses: List[GroupAnalysis]
+
+    @property
+    def edp(self) -> float:
+        return self.delay_s * self.energy_j
+
+    def cost(self, beta: float = 1.0, gamma: float = 1.0) -> float:
+        return (self.energy_j ** beta) * (self.delay_s ** gamma)
+
+
+def _pipeline_depth(g: Graph, group: LayerGroup) -> int:
+    """Longest dependency chain within the group (fill/drain passes)."""
+    names = set(group.names)
+    depth: Dict[str, int] = {}
+    for n in g.topo_order():
+        if n not in names:
+            continue
+        preds = [p for p in g.preds(n) if p in names]
+        depth[n] = 1 + max((depth[p] for p in preds), default=0)
+    return max(depth.values(), default=1)
+
+
+class Evaluator:
+    """Per-(arch, graph) evaluator; reuses the Analyzer and its caches."""
+
+    def __init__(self, arch: ArchConfig, g: Graph):
+        self.arch = arch
+        self.g = g
+        self.analyzer = Analyzer(arch, g)
+        self.grid = router_grid(arch)
+
+    # ------------------------------------------------------------------
+    def eval_group(self, group: LayerGroup, lms: LMS,
+                   total_batch: int) -> Tuple[GroupEval, GroupAnalysis]:
+        arch, g, tech = self.arch, self.g, self.arch.tech
+        an = self.analyzer.analyze(group, lms, total_batch)
+        bu = group.batch_unit
+        n_passes = max(1, -(-total_batch // bu))
+        depth = _pipeline_depth(g, group)
+
+        # -- per-core compute time (uses intra-core utilization) -----------
+        core_time = np.zeros(arch.n_cores)
+        glb_rd = 0.0
+        glb_wr = 0.0
+        for name, regs in an.layer_parts.items():
+            lyr = g.layers[name]
+            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
+            for core, r in regs.items():
+                rk = r.k1 - r.k0
+                hwb = max(1, r.elems // max(1, rk))
+                df = explore_intra_core(rk, lyr.C, hwb, lyr.R, lyr.S,
+                                        lyr.bytes_per_elem, arch.core_glb_bytes,
+                                        arch.macs_per_core, lyr.kind)
+                macs = r.elems * mac_per_elem
+                peak = arch.macs_per_core * arch.freq_ghz * 1e9
+                core_time[core] += macs / (peak * max(df.utilization, 1e-3))
+                glb_rd += df.glb_read_bytes
+                glb_wr += df.glb_write_bytes
+
+        # -- resource times per pass ---------------------------------------
+        edge_tot = an.edge_bytes + an.edge_bytes_amortized
+        is_d2d = self.grid.edge_is_d2d
+        t_noc = float((edge_tot[~is_d2d] / (arch.noc_bw * 1e9)).max(initial=0.0))
+        t_d2d = float((edge_tot[is_d2d] / (arch.d2d_bw * 1e9)).max(initial=0.0)) \
+            if is_d2d.any() else 0.0
+        dram_port_bw = arch.dram_bw / arch.n_dram * 1e9
+        t_dram = float(((an.dram_bytes + an.dram_bytes_amortized)
+                        / dram_port_bw).max(initial=0.0))
+        t_comp = float(core_time.max(initial=0.0))
+        stage = max(t_comp, t_noc, t_d2d, t_dram, 1e-12)
+        bottleneck = ["compute", "noc", "d2d", "dram"][
+            int(np.argmax([t_comp, t_noc, t_d2d, t_dram]))]
+
+        # -- GLB overcommit: soft penalty -----------------------------------
+        over = np.maximum(an.core_glb_need - arch.core_glb_bytes, 0.0)
+        overflow = float(over.sum())
+        spill_dram = overflow * 2.0          # write + re-read per pass
+        stage *= 1.0 + overflow / (arch.core_glb_bytes * arch.n_cores)
+        t_dram_spill = spill_dram / (arch.dram_bw * 1e9)
+        stage += t_dram_spill
+
+        delay = stage * (n_passes + depth - 1)
+
+        # -- energy over the whole batch -------------------------------------
+        noc_bytes = float(edge_tot[~is_d2d].sum()) * n_passes
+        d2d_bytes = float(edge_tot[is_d2d].sum()) * n_passes
+        dram_b = float(an.dram_bytes.sum()) * n_passes \
+            + an.weight_dram_bytes_total + spill_dram * n_passes
+        macs_total = float(an.core_macs.sum()) * n_passes
+        e = {
+            "mac": macs_total * tech.e_mac,
+            "glb": (glb_rd + glb_wr + float(an.core_in_bytes.sum())) * n_passes
+                   * tech.e_glb_byte,
+            "noc": (noc_bytes + d2d_bytes) * tech.e_noc_hop_byte,
+            "d2d": d2d_bytes * tech.e_d2d_byte,
+            "dram": dram_b * tech.e_dram_byte,
+        }
+        ge = GroupEval(delay_s=delay, energy_j=sum(e.values()),
+                       stage_time_s=stage, n_passes=n_passes, depth=depth,
+                       bottleneck=bottleneck, glb_overflow_bytes=overflow,
+                       energy_breakdown=e)
+        return ge, an
+
+    # ------------------------------------------------------------------
+    def evaluate(self, mapping: Sequence[Tuple[LayerGroup, LMS]],
+                 total_batch: int) -> EvalResult:
+        groups: List[GroupEval] = []
+        analyses: List[GroupAnalysis] = []
+        for group, lms in mapping:
+            ge, an = self.eval_group(group, lms, total_batch)
+            groups.append(ge)
+            analyses.append(an)
+        return EvalResult(
+            delay_s=sum(ge.delay_s for ge in groups),
+            energy_j=sum(ge.energy_j for ge in groups),
+            groups=groups, analyses=analyses)

@@ -1,0 +1,116 @@
+"""Intra-core dataflow exploration (paper Sec. V-B1, last stage).
+
+For the partitioned workload landing on one core, we exhaustively search
+NVDLA-style tilings: tile sizes (tk, tc, th, tw) over a power-of-two grid and
+three loop orders (weight- / output- / input-stationary).  The PE array is
+modeled as the classic NVDLA Kvec x Cvec MAC tree (16 x 64 by default for
+1024 MACs), which fixes the register-level reuse; the search decides the
+GLB-level reuse, i.e. how many times each operand is re-read from the GLB
+and how often partial sums bounce.
+
+Outputs per workload: GLB traffic in bytes (for energy), the achieved MAC
+utilization (array padding loss), and the chosen tile.  Results are memoized
+on the workload signature — the SA engine hits the same shapes constantly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class CoreDataflow:
+    tile: Tuple[int, int, int, int]       # (tk, tc, th, tw)
+    order: str                            # ws | os | is
+    glb_read_bytes: float
+    glb_write_bytes: float
+    utilization: float                    # MAC array utilization in [0,1]
+
+
+def _pow2_tiles(dim: int, cap: int) -> Tuple[int, ...]:
+    out = []
+    t = 1
+    while t < min(dim, cap):
+        out.append(t)
+        t *= 2
+    out.append(min(dim, cap))
+    return tuple(sorted(set(out)))
+
+
+@lru_cache(maxsize=200_000)
+def explore_intra_core(K: int, C: int, HW: int, R: int, S: int,
+                       bytes_per_elem: int, glb_bytes: int,
+                       macs_per_core: int, kind: str) -> CoreDataflow:
+    """Exhaustive tiling/loop-order search for one per-core workload.
+
+    K: ofmap channels on this core; C: contraction channels; HW: spatial
+    positions (H*W*B collapsed — they are fully parallel); RxS kernel.
+    """
+    kvec = 16
+    cvec = max(1, macs_per_core // kvec)
+    if kind in ("eltwise", "pool", "depthwise"):
+        # streaming ops: one read + one write per element, trivially tiled
+        vol = K * HW * bytes_per_elem
+        return CoreDataflow((K, 1, HW, 1), "stream",
+                            glb_read_bytes=float(vol * (2 if kind == "eltwise" else 1)),
+                            glb_write_bytes=float(vol),
+                            utilization=1.0)
+
+    C_eff = max(1, C)
+    w_elems = K * C_eff * R * S if kind in ("conv", "fc") else 0
+    if_elems = C_eff * HW * (R * S if kind == "conv" else 1)
+    of_elems = K * HW
+    psum_bytes = 4                      # 32-bit partial sums
+
+    best: CoreDataflow | None = None
+    for tk in _pow2_tiles(K, 512):
+        for tc in _pow2_tiles(C_eff, 512):
+            for thw in _pow2_tiles(HW, 4096):
+                # buffer need: weights tile + ifmap tile + psum tile (dbl buf fmaps)
+                buf = (tk * tc * R * S * bytes_per_elem
+                       + tc * thw * bytes_per_elem * 2
+                       + tk * thw * psum_bytes)
+                if buf > glb_bytes:
+                    continue
+                nk = -(-K // tk)
+                nc = -(-C_eff // tc)
+                nhw = -(-HW // thw)
+                for order in ("ws", "os", "is"):
+                    if order == "ws":      # weights resident per (tk,tc) tile
+                        rd = (w_elems * 1.0
+                              + if_elems * nk            # ifmap re-read per k tile
+                              ) * bytes_per_elem \
+                            + of_elems * (nc - 1) * psum_bytes  # psum re-read
+                        wr = of_elems * nc * psum_bytes
+                    elif order == "os":    # outputs resident, operands stream
+                        rd = (w_elems * nhw + if_elems * nk) * bytes_per_elem
+                        wr = of_elems * psum_bytes
+                    else:                  # is: ifmap resident per (tc,thw) tile
+                        rd = (w_elems * nhw + if_elems * 1.0) * bytes_per_elem \
+                            + of_elems * (nc - 1) * psum_bytes
+                        wr = of_elems * nc * psum_bytes
+                    # MAC array padding loss on the vectorized dims
+                    uk = K / (-(-K // kvec) * kvec)
+                    uc = C_eff / (-(-C_eff // cvec) * cvec)
+                    util = uk * uc
+                    cand = CoreDataflow((tk, tc, thw, 1), order, rd, wr, util)
+                    if best is None or (cand.glb_read_bytes + cand.glb_write_bytes
+                                        < best.glb_read_bytes + best.glb_write_bytes):
+                        best = cand
+    if best is None:
+        # nothing fits: fall back to minimum tiles with spill multipliers
+        tk, tc, thw = 1, 1, 1
+        rd = (w_elems * HW + if_elems * K) * bytes_per_elem
+        wr = of_elems * C_eff * psum_bytes
+        best = CoreDataflow((tk, tc, thw, 1), "spill", float(rd), float(wr),
+                            utilization=1.0 / (kvec * cvec))
+    return best
+
+
+def core_workload_signature(layer_K: int, layer_C: int, region_elems: int,
+                            region_k: int, R: int, S: int) -> Tuple[int, int, int, int, int]:
+    """Collapse a Region into the intra-core search signature."""
+    hwb = max(1, region_elems // max(1, region_k))
+    return (region_k, layer_C, hwb, R, S)

@@ -1,0 +1,183 @@
+"""Workload IR: DNN layers as a DAG with 4-D ofmap cubes (paper Sec. IV).
+
+Every layer exposes the paper's abstraction: an ofmap cube (B, K, H, W), a
+contraction structure (C input channels, RxS kernel, stride) and a weight
+flag.  This is enough for the encoding, the analyzer, the intra-core tiling
+search and both evaluators.  Transformer / SSM / MoE ops are expressed in the
+same cube language (see core/workloads/).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+LayerKind = str  # conv | fc | pool | eltwise | matmul | depthwise
+
+
+@dataclass(frozen=True)
+class Layer:
+    """One DAG node.  Dims are per *sample*; B is filled by the batch unit."""
+    name: str
+    kind: LayerKind
+    K: int                  # ofmap channels
+    H: int = 1              # ofmap height (sequence length for LM layers)
+    W: int = 1              # ofmap width
+    C: int = 0              # contraction channels (0 for eltwise/pool)
+    R: int = 1              # kernel height
+    S: int = 1              # kernel width
+    stride: int = 1
+    groups: int = 1                 # grouped conv (ResNeXt); C is per-layer total
+    bytes_per_elem: int = 1         # int8 inference default
+    n_inputs: int = 1               # eltwise add has 2
+    # 'matmul' layers contract activations with activations (attention):
+    # their "weight" operand is itself a produced tensor, so has_weight=False.
+
+    def __post_init__(self):
+        if self.K <= 0 or self.H <= 0 or self.W <= 0:
+            raise ValueError(f"bad ofmap dims for {self.name}")
+
+    # -- sizes per sample, in elements ---------------------------------------
+    @property
+    def has_weight(self) -> bool:
+        return self.kind in ("conv", "fc", "depthwise")
+
+    @property
+    def ofmap_elems(self) -> int:
+        return self.K * self.H * self.W
+
+    @property
+    def ifmap_elems(self) -> int:
+        if self.kind in ("eltwise",):
+            return self.ofmap_elems * self.n_inputs
+        if self.kind == "pool":
+            return self.K * self.H * self.stride * self.W * self.stride
+        if self.kind == "depthwise":
+            return self.K * self.H * self.stride * self.W * self.stride
+        if self.kind == "matmul":
+            # ifmap = (H x C) activations; "weight-side" = (C x K) activations
+            return self.H * self.C + self.C * self.K
+        return self.C * self.H * self.stride * self.W * self.stride
+
+    @property
+    def weight_elems(self) -> int:
+        if self.kind == "conv":
+            return self.K * (self.C // self.groups) * self.R * self.S
+        if self.kind == "fc":
+            return self.K * self.C
+        if self.kind == "depthwise":
+            return self.K * self.R * self.S
+        return 0
+
+    def macs(self, batch: int = 1) -> int:
+        """Multiply-accumulates per ``batch`` samples."""
+        if self.kind in ("conv",):
+            m = self.K * self.H * self.W * (self.C // self.groups) * self.R * self.S
+        elif self.kind == "fc":
+            m = self.K * self.H * self.W * self.C
+        elif self.kind == "matmul":
+            m = self.H * self.K * self.C
+        elif self.kind == "depthwise":
+            m = self.K * self.H * self.W * self.R * self.S
+        elif self.kind == "pool":
+            m = self.K * self.H * self.W * self.stride * self.stride
+        else:  # eltwise
+            m = self.ofmap_elems * self.n_inputs
+        return m * batch
+
+    def ofmap_bytes(self, batch: int = 1) -> int:
+        return self.ofmap_elems * self.bytes_per_elem * batch
+
+    def weight_bytes(self) -> int:
+        return self.weight_elems * self.bytes_per_elem
+
+
+@dataclass
+class Graph:
+    """DNN DAG.  Edges carry producer->consumer feature-map dependencies."""
+    name: str
+    layers: Dict[str, Layer] = field(default_factory=dict)
+    edges: List[Tuple[str, str]] = field(default_factory=list)
+    # graph inputs: layers whose ifmaps come from DRAM (the DNN input)
+    input_layers: List[str] = field(default_factory=list)
+
+    def add(self, layer: Layer, inputs: Sequence[str] = ()) -> Layer:
+        if layer.name in self.layers:
+            raise ValueError(f"duplicate layer {layer.name}")
+        self.layers[layer.name] = layer
+        for src in inputs:
+            if src not in self.layers:
+                raise ValueError(f"unknown input {src} for {layer.name}")
+            self.edges.append((src, layer.name))
+        if not inputs:
+            self.input_layers.append(layer.name)
+        return layer
+
+    # -- queries --------------------------------------------------------------
+    def preds(self, name: str) -> List[str]:
+        return [s for s, d in self.edges if d == name]
+
+    def succs(self, name: str) -> List[str]:
+        return [d for s, d in self.edges if s == name]
+
+    def topo_order(self) -> List[str]:
+        indeg = {n: 0 for n in self.layers}
+        for _, d in self.edges:
+            indeg[d] += 1
+        frontier = [n for n in self.layers if indeg[n] == 0]
+        out: List[str] = []
+        while frontier:
+            n = frontier.pop(0)
+            out.append(n)
+            for d in self.succs(n):
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    frontier.append(d)
+        if len(out) != len(self.layers):
+            raise ValueError(f"cycle in graph {self.name}")
+        return out
+
+    def output_layers(self) -> List[str]:
+        return [n for n in self.layers if not self.succs(n)]
+
+    def total_macs(self, batch: int = 1) -> int:
+        return sum(l.macs(batch) for l in self.layers.values())
+
+    def total_weight_bytes(self) -> int:
+        return sum(l.weight_bytes() for l in self.layers.values())
+
+    def subgraph(self, names: Sequence[str], name: Optional[str] = None) -> "Graph":
+        keep = set(names)
+        g = Graph(name or f"{self.name}[{len(keep)}]")
+        g.layers = {n: self.layers[n] for n in names}
+        g.edges = [(s, d) for s, d in self.edges if s in keep and d in keep]
+        g.input_layers = [n for n in names
+                          if not any(d == n and s in keep for s, d in self.edges)]
+        return g
+
+    def validate(self) -> None:
+        self.topo_order()
+        for s, d in self.edges:
+            if s not in self.layers or d not in self.layers:
+                raise ValueError(f"dangling edge {s}->{d}")
+
+
+# ---------------------------------------------------------------------------
+# Layer groups (output of graph partitioning, input to the mapping engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerGroup:
+    """A contiguous-in-topo-order set of layers pipelined together."""
+    names: Tuple[str, ...]
+    batch_unit: int = 1          # samples processed per pipeline pass
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def edge_volume(g: Graph, src: str, dst: str, batch: int = 1) -> int:
+    """Bytes of feature map flowing src->dst per ``batch`` samples."""
+    l = g.layers[src]
+    return l.ofmap_bytes(batch)

@@ -1,0 +1,15 @@
+"""Workload DAGs: the paper's five DNNs + the assigned LM architectures."""
+
+from .cnn import inception_resnet_v1, pnasnet, resnet50, resnext50
+from .transformer import transformer
+
+PAPER_WORKLOADS = {
+    "RN-50": resnet50,
+    "RNX": resnext50,
+    "IRes": inception_resnet_v1,
+    "PNas": pnasnet,
+    "TF": transformer,
+}
+
+__all__ = ["resnet50", "resnext50", "inception_resnet_v1", "pnasnet",
+           "transformer", "PAPER_WORKLOADS"]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Naive softmax attention.  q/k/v: (B, H, S, D), MHA layout."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        Sq, Sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(x: jax.Array, cum: jax.Array, Bm: jax.Array,
+                  Cm: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.mamba_ssd.ssd_chunk_dual (all f32 math).
+
+    x (BC,Q,H,P); cum (BC,Q,H); Bm/Cm (BC,Q,N)."""
+    xf = x.astype(jnp.float32)
+    cumf = cum.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Q = x.shape[1]
+    scores = jnp.einsum("cin,cjn->cij", Cf, Bf)
+    diff = cumf[:, :, None, :] - cumf[:, None, :, :]
+    ii = jnp.arange(Q)
+    L = jnp.where((ii[:, None] >= ii[None, :])[None, :, :, None],
+                  jnp.exp(diff), 0.0)
+    y = jnp.einsum("cij,cijh,cjhp->cihp", scores, L, xf)
+    decay_end = jnp.exp(cumf[:, -1:, :] - cumf)
+    state = jnp.einsum("cjn,cjh,cjhp->chnp", Bf, decay_end, xf)
+    return y, state
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,112 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> measure.
+
+Each named VARIANT is a (rules/cfg/bundle)-override set applied to one
+(arch x shape) cell on the single-pod mesh.  Results append to
+results/hillclimb.json keyed cell/variant, with the three roofline terms,
+so EXPERIMENTS.md §Perf can show before/after per hypothesis.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell \
+      qwen1.5-110b/train_4k --variant baseline,no_fsdp ...
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Dict
+
+from .dryrun import run_cell
+
+# variant name -> dict(rules_overrides=..., cfg_overrides=..., cell_kw=...)
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    # --- sharding-axis changes -------------------------------------------
+    "no_fsdp": {        # pure 1-D TP params (kills per-layer all-gathers,
+                        # pays replicated-param memory)
+        "rules_overrides": {"embed": None}},
+    "no_fsdp_zero1": {  # params replicated, optimizer state ZeRO-1 sharded
+        "rules_overrides": {"embed": None}, "cell_kw": {"zero1": True}},
+    "fsdp_zero1": {"cell_kw": {"zero1": True}},
+    "seq_shard_act": {  # context-parallel attention activations
+        "rules_overrides": {"act_kv": None, "act_seq": "model"}},
+    "experts_on_data": {  # MoE: expert dim over the data axis
+        "rules_overrides": {"experts": "data", "expert_mlp": "model"}},
+    "moe_grouped16": {    # group-local dispatch aligned with data shards
+        "cfg_overrides": {"moe_dispatch_groups": 16}},
+    "moe_grouped32": {
+        "cfg_overrides": {"moe_dispatch_groups": 32}},
+    "moe_flat": {         # naive flat scatter (pre-optimization baseline)
+        "cfg_overrides": {"moe_dispatch_groups": 0}},
+    "moe_grouped16_micro2": {
+        "cfg_overrides": {"moe_dispatch_groups": 16},
+        "cell_kw": {"n_micro": 2}},
+    # --- schedule / recompute changes ------------------------------------
+    "micro1": {"cell_kw": {"n_micro": 1}},
+    "micro2": {"cell_kw": {"n_micro": 2}},
+    "micro8": {"cell_kw": {"n_micro": 8}},
+    "micro16": {"cell_kw": {"n_micro": 16}},
+    "no_remat": {"cfg_overrides": {"remat": False}},
+    # --- serving-specific --------------------------------------------------
+    "serve_tp_only": {  # decode/prefill: params pure-TP (no data-axis shard)
+        "rules_overrides": {"embed": None}},
+    "decode_batch_2d": {  # decode batch over (data x model), cache unsharded
+                          # on seq (per-device full heads)
+        "rules_overrides": {"batch": ("pod", "data", "model"),
+                            "kv_seq": None, "act_kv_seq": None}},
+    "cache_head_shard": {  # decode cache sharded on kv heads (when it fits)
+        "rules_overrides": {"kv_seq": None, "act_kv_seq": None,
+                            "kv_heads": "model", "act_kv": "model"}},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch/shape, e.g. qwen1.5-110b/train_4k")
+    ap.add_argument("--variant", required=True,
+                    help="comma-separated variant names")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    arch, shape = args.cell.split("/")
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = json.loads(out_path.read_text()) if out_path.exists() else {}
+
+    for vname in args.variant.split(","):
+        spec = VARIANTS[vname]
+        key = f"{args.cell}|{args.mesh}|{vname}"
+        if key in results and results[key].get("ok") and not args.force:
+            print(f"[skip] {key}")
+            continue
+        print(f"[variant] {key} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, args.mesh,
+                           rules_overrides=spec.get("rules_overrides"),
+                           cfg_overrides=spec.get("cfg_overrides"),
+                           **spec.get("cell_kw", {}))
+            rec["variant"] = vname
+            print(f"[ok] {key}: compute={rec['t_compute']*1e3:.1f}ms "
+                  f"memory={rec['t_memory']*1e3:.1f}ms "
+                  f"coll={rec['t_collective']*1e3:.1f}ms "
+                  f"bound={rec['t_compute'] and max(rec['t_compute'], rec['t_memory'], rec['t_collective'])*1e3:.1f}ms "
+                  f"frac={rec['roofline_fraction']:.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"ok": False, "variant": vname,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {key}: {rec['error'][:160]}", flush=True)
+        results[key] = rec
+        out_path.write_text(json.dumps(results, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.  Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} "
+            f"(dry-run sets --xla_force_host_platform_device_count=512)")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...] = (1, 1),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples / CPU)."""
+    import jax
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)

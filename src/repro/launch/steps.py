@@ -1,0 +1,308 @@
+"""Step builders: jitted train / prefill / decode steps with explicit
+in/out shardings, plus ``input_specs()`` — ShapeDtypeStruct stand-ins for
+every model input (dry-run pattern: weak-type-correct, shardable, no
+allocation).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig
+from ..models import model_api
+from ..nn.params import (Pytree, ShardingRules, default_rules, tree_sharding,
+                         tree_spec)
+from ..optim.adamw import AdamWConfig, adamw_update, init_opt_state, zero1_axes
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# input_specs: every model input as ShapeDtypeStruct
+# ---------------------------------------------------------------------------
+
+def batch_axes(cfg: ModelConfig, kind: str) -> Dict[str, Tuple]:
+    a: Dict[str, Tuple] = {}
+    if cfg.frontend in ("patch", "audio"):
+        a["embeds"] = ("batch", "seq", "embed")
+        if cfg.family == "encdec":
+            a["tokens"] = ("batch", "seq")
+    else:
+        a["tokens"] = ("batch", "seq")
+    if kind == "train":
+        a["labels"] = ("batch", "seq")
+    return a
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """ShapeDtypeStructs for the step-function *batch* argument."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, SDS] = {}
+    if shape.kind == "decode":
+        out["tokens"] = SDS((B, 1), jnp.int32)
+        return out
+    if cfg.frontend in ("patch", "audio"):
+        out["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["tokens"] = SDS((B, S), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def get_param_axes(cfg: ModelConfig) -> Pytree:
+    """Logical axes of the param tree (structure-only; uses reduced dims)."""
+    api = model_api(cfg.reduced())
+    _, axes = api.init_params(jax.random.PRNGKey(0))
+    return axes
+
+
+def param_structs(cfg: ModelConfig, serve_dtype: Optional[str] = None) -> Pytree:
+    api = model_api(cfg)
+    structs = jax.eval_shape(
+        lambda k: api.init_params(k)[0], SDS((2,), jnp.uint32))
+    if serve_dtype is not None:
+        dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[serve_dtype]
+        structs = jax.tree.map(
+            lambda s: SDS(s.shape, dt) if jnp.issubdtype(s.dtype, jnp.floating)
+            else s, structs)
+    return structs
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_seq: int,
+                  enc_len: Optional[int] = None) -> Tuple[Pytree, Pytree]:
+    api = model_api(cfg)
+    structs = jax.eval_shape(
+        lambda: api.init_cache(batch, max_seq, enc_len)[0])
+    # axes come from a reduced-config concrete call (tiny)
+    rapi = model_api(cfg.reduced())
+    _, axes = rapi.init_cache(2, 8, 8)
+    return structs, axes
+
+
+# ---------------------------------------------------------------------------
+# Cell bundles
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellBundle:
+    """Everything needed to .lower() one (arch x shape x mesh) cell."""
+    name: str
+    fn: Callable                    # jitted
+    args: Tuple[Any, ...]           # ShapeDtypeStructs (abstract)
+    static_desc: str = ""
+
+
+def _shardings(tree_axes: Pytree, rules: ShardingRules, mesh: Mesh) -> Pytree:
+    return tree_sharding(tree_axes, rules, mesh)
+
+
+def derive_attn_rules(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
+                      kind: str) -> ShardingRules:
+    """Pick the attention activation layout for this (arch x mesh):
+      kv-shard   when n_kv divides the model axis,
+      repeat-kv  when only n_heads divides it (Megatron GQA trick; transient
+                 tensors only — never the cache; disabled for decode where
+                 the cache's kv_seq sharding already balances),
+      seq-shard  (context parallel) otherwise.
+    MoE: when n_experts doesn't divide the model axis, shard the expert FFN
+    hidden dim instead of the expert dim."""
+    M = mesh.shape.get("model", 1)
+    if cfg.n_experts and cfg.n_experts % M != 0:
+        rules = rules.replace_rules(experts=None, expert_mlp="model")
+    if cfg.family == "ssm":
+        return rules
+    if kind == "decode":
+        return rules.replace_rules(act_kv=None, act_kv_seq="model")
+    if cfg.n_kv % M == 0:
+        return rules
+    if cfg.n_heads % M == 0:
+        return rules.replace_rules(repeat_kv=True)
+    return rules.replace_rules(act_kv=None, act_seq="model")
+
+
+def serve_param_rules(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules,
+                      kind: str = "decode") -> ShardingRules:
+    """Serving default: drop the FSDP (data-axis) shard on params when the
+    TP-sharded bf16 weights fit comfortably in HBM.  Confirmed in §Perf
+    (qwen1.5-110b decode: collective term 552ms -> 2ms): static serving
+    weights should not be re-gathered every step.  Exceptions kept 2-D:
+    models that don't fit (<8 GB/dev rule) and SSM/hybrid *prefill* (the
+    SSD einsums repartition poorly without the data axis — measured 0.63x
+    regression on zamba2 prefill, so the rule backs off there)."""
+    if kind == "prefill" and cfg.family in ("ssm", "hybrid"):
+        return rules
+    M = mesh.shape.get("model", 1)
+    bytes_tp = cfg.param_count() * 2 / M
+    if bytes_tp < 8e9:
+        return rules.replace_rules(embed=None)
+    return rules
+
+
+def fit_batch_rules(rules: ShardingRules, global_batch: int,
+                    mesh: Mesh) -> ShardingRules:
+    """Shrink the 'batch' rule to the largest mesh-axis prefix whose product
+    divides global_batch (batch=1 long-context cells stay unsharded)."""
+    raw = rules.rules.get("batch")
+    if raw is None:
+        return rules
+    names = [raw] if isinstance(raw, str) else list(raw)
+    names = [n for n in names if n in mesh.axis_names]
+    while names:
+        prod = 1
+        for n in names:
+            prod *= mesh.shape[n]
+        if global_batch % prod == 0:
+            break
+        names.pop()
+    return rules.replace_rules(batch=tuple(names) if names else None)
+
+
+def make_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      rules: Optional[ShardingRules] = None,
+                      n_micro: int = 1, zero1: bool = False,
+                      opt_cfg: Optional[AdamWConfig] = None) -> CellBundle:
+    rules = fit_batch_rules(rules or default_rules(), shape.global_batch, mesh)
+    rules = derive_attn_rules(cfg, mesh, rules, "train")
+    opt_cfg = opt_cfg or AdamWConfig()
+    api = model_api(cfg)
+    p_axes = get_param_axes(cfg)
+    p_structs = param_structs(cfg)
+    o_structs = jax.eval_shape(init_opt_state, p_structs)
+    if zero1:
+        mv_axes = zero1_axes(p_axes, p_structs,
+                             mesh_size=mesh.shape.get("data", 1))
+        rules = rules.replace_rules(opt_shard="data")
+    else:
+        mv_axes = p_axes
+    state_structs = {"params": p_structs, "opt": o_structs}
+    state_shardings = {
+        "params": _shardings(p_axes, rules, mesh),
+        "opt": {"m": _shardings(mv_axes, rules, mesh),
+                "v": _shardings(mv_axes, rules, mesh),
+                "step": NamedSharding(mesh, P())},
+    }
+    b_axes = batch_axes(cfg, "train")
+    b_structs = input_specs(cfg, shape)
+    b_shardings = {k: NamedSharding(mesh, rules.spec(b_axes[k], mesh))
+                   for k in b_structs}
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+
+        def loss_of(p, b):
+            return api.loss_fn(p, b, rules)
+
+        if n_micro > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, b):
+                gsum, lsum = carry
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + m["nll"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            nll = lsum / n_micro
+        else:
+            (l, m), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+            nll = m["nll"]
+        new_p, new_opt, om = adamw_update(opt_cfg, params, grads, opt)
+        metrics = {"loss": nll, **om}
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(state_shardings, b_shardings),
+        out_shardings=(state_shardings,
+                       {"loss": NamedSharding(mesh, P()),
+                        "grad_norm": NamedSharding(mesh, P()),
+                        "lr": NamedSharding(mesh, P())}),
+        donate_argnums=(0,))
+    return CellBundle(name=f"{cfg.name}/{shape.name}", fn=jitted,
+                      args=(state_structs, b_structs),
+                      static_desc=f"train micro={n_micro} zero1={zero1}")
+
+
+def make_prefill_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        rules: Optional[ShardingRules] = None) -> CellBundle:
+    rules = fit_batch_rules(rules or default_rules(), shape.global_batch, mesh)
+    rules = derive_attn_rules(cfg, mesh, rules, "prefill")
+    rules = serve_param_rules(cfg, mesh, rules, "prefill")
+    api = model_api(cfg)
+    p_axes = get_param_axes(cfg)
+    p_structs = param_structs(cfg, serve_dtype="bfloat16")
+    c_structs, c_axes = cache_structs(cfg, shape.global_batch, shape.seq_len,
+                                      enc_len=shape.seq_len)
+    b_structs = input_specs(cfg, shape)
+    b_axes = batch_axes(cfg, "prefill")
+
+    def prefill_fn(params, batch, cache):
+        return api.prefill(params, batch, cache, rules)
+
+    jitted = jax.jit(
+        prefill_fn,
+        in_shardings=(_shardings(p_axes, rules, mesh),
+                      {k: NamedSharding(mesh, rules.spec(b_axes[k], mesh))
+                       for k in b_structs},
+                      _shardings(c_axes, rules, mesh)),
+        out_shardings=(NamedSharding(mesh, rules.spec(("batch", "vocab"), mesh)),
+                       _shardings(c_axes, rules, mesh)),
+        donate_argnums=(2,))
+    return CellBundle(name=f"{cfg.name}/{shape.name}", fn=jitted,
+                      args=(p_structs, b_structs, c_structs),
+                      static_desc="prefill")
+
+
+def make_decode_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       rules: Optional[ShardingRules] = None) -> CellBundle:
+    rules = fit_batch_rules(rules or default_rules(), shape.global_batch, mesh)
+    rules = derive_attn_rules(cfg, mesh, rules, "decode")
+    rules = serve_param_rules(cfg, mesh, rules, "decode")
+    api = model_api(cfg)
+    p_axes = get_param_axes(cfg)
+    p_structs = param_structs(cfg, serve_dtype="bfloat16")
+    c_structs, c_axes = cache_structs(cfg, shape.global_batch, shape.seq_len,
+                                      enc_len=min(shape.seq_len, 32768))
+    tok = SDS((shape.global_batch, 1), jnp.int32)
+
+    def decode_fn(params, tokens, cache):
+        return api.decode_step(params, tokens, cache, rules)
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(_shardings(p_axes, rules, mesh),
+                      NamedSharding(mesh, rules.spec(("batch", "seq"), mesh)),
+                      _shardings(c_axes, rules, mesh)),
+        out_shardings=(NamedSharding(mesh, rules.spec(("batch", "vocab"), mesh)),
+                       _shardings(c_axes, rules, mesh)),
+        donate_argnums=(2,))
+    return CellBundle(name=f"{cfg.name}/{shape.name}", fn=jitted,
+                      args=(p_structs, tok, c_structs),
+                      static_desc="decode")
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              rules: Optional[ShardingRules] = None,
+              **kw) -> CellBundle:
+    if shape.kind == "train":
+        big = cfg.param_count() > 5e9
+        kw.setdefault("n_micro", 4 if big else 1)
+        return make_train_bundle(cfg, shape, mesh, rules, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, rules)
+    return make_decode_bundle(cfg, shape, mesh, rules)

@@ -1,0 +1,62 @@
+"""Model zoo: one decoder-LM covering dense/moe/ssm/hybrid + an enc-dec.
+
+``model_api(cfg)`` returns the family-appropriate (init, loss, prefill,
+decode_step, init_cache) bundle so launchers never branch on family.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec, lm
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def model_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        def init_cache(batch, max_seq, enc_len=None):
+            return encdec.init_cache(cfg, batch, max_seq,
+                                     enc_len or min(max_seq, 1500))
+
+        def prefill(params, batch, cache, rules=None):
+            enc_out = encdec.encode(cfg, params, batch["embeds"], rules)
+            cache = dict(cache)
+            cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+            logits, new_cache = encdec.decode(
+                cfg, params, batch["tokens"], enc_out, cache=cache,
+                update_cache=True, rules=rules)
+            return logits[:, -1], new_cache
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(cfg, key),
+            loss_fn=lambda p, b, rules=None: encdec.loss_fn(cfg, p, b, rules),
+            init_cache=init_cache,
+            prefill=prefill,
+            decode_step=lambda p, t, c, rules=None:
+                encdec.decode_step(cfg, p, t, c, rules),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key: lm.init_params(cfg, key),
+        loss_fn=lambda p, b, rules=None: lm.loss_fn(cfg, p, b, rules),
+        init_cache=lambda batch, max_seq, enc_len=None:
+            lm.init_cache(cfg, batch, max_seq),
+        prefill=lambda p, b, c, rules=None: lm.prefill(cfg, p, b, c, rules),
+        decode_step=lambda p, t, c, rules=None:
+            lm.decode_step(cfg, p, t, c, rules),
+    )

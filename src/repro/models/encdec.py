@@ -1,0 +1,212 @@
+"""Encoder-decoder model (whisper-small backbone).
+
+Encoder: pre-LN transformer over precomputed frame embeddings (the conv
+frontend is a STUB per the assignment — ``input_specs()`` supplies frame
+embeddings directly).  Decoder: self-attention (causal, KV-cached) +
+cross-attention to the final encoder states + GELU MLP.  Sinusoidal absolute
+positions are added to both streams (adaptation from whisper's
+learned/sinusoidal split, noted in DESIGN.md); layers are scan-stacked like
+the decoder-only models.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..nn.attention import (attention_block, init_attention, init_kv_cache,
+                            kv_cache_axes, multihead_attention)
+from ..nn.layers import (embed, init_embedding, init_layernorm, init_linear,
+                         layernorm, linear, softmax_cross_entropy, unembed)
+from ..nn.params import (Pytree, ShardingRules, default_rules,
+                         shard_constraint)
+from .lm import _dtype, apply_mlp, init_mlp
+
+Params = Pytree
+Cache = Dict[str, Any]
+
+
+def sinusoidal(seq: int, d: int, offset: jax.Array | int = 0) -> jax.Array:
+    pos = offset + jnp.arange(seq)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> Tuple[Pytree, Pytree]:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = init_layernorm(cfg.d_model, dtype=dt)
+    p["attn"], a["attn"] = init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv, cfg.hd, dtype=dt)
+    p["norm2"], a["norm2"] = init_layernorm(cfg.d_model, dtype=dt)
+    p["mlp"], a["mlp"] = init_mlp(ks[1], cfg, dt)
+    return p, a
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> Tuple[Pytree, Pytree]:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = init_layernorm(cfg.d_model, dtype=dt)
+    p["self_attn"], a["self_attn"] = init_attention(
+        ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype=dt)
+    p["norm_x"], a["norm_x"] = init_layernorm(cfg.d_model, dtype=dt)
+    p["cross_attn"], a["cross_attn"] = init_attention(
+        ks[1], cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd, dtype=dt)
+    p["norm2"], a["norm2"] = init_layernorm(cfg.d_model, dtype=dt)
+    p["mlp"], a["mlp"] = init_mlp(ks[2], cfg, dt)
+    return p, a
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Pytree]:
+    dt = _dtype(cfg.param_dtype)
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = init_embedding(k_emb, cfg.padded_vocab,
+                                            cfg.d_model, dtype=dt)
+    ek = jax.random.split(k_enc, cfg.n_enc_layers)
+    p["enc_blocks"] = jax.vmap(lambda k: _init_enc_block(k, cfg)[0])(ek)
+    _, ea = _init_enc_block(ek[0], cfg.reduced())
+    a["enc_blocks"] = _stack_axes(ea)
+    dk = jax.random.split(k_dec, cfg.n_layers)
+    p["dec_blocks"] = jax.vmap(lambda k: _init_dec_block(k, cfg)[0])(dk)
+    _, da = _init_dec_block(dk[0], cfg.reduced())
+    a["dec_blocks"] = _stack_axes(da)
+    p["enc_norm"], a["enc_norm"] = init_layernorm(cfg.d_model, dtype=dt)
+    p["dec_norm"], a["dec_norm"] = init_layernorm(cfg.d_model, dtype=dt)
+    return p, a
+
+
+def _stack_axes(axes: Pytree) -> Pytree:
+    return jax.tree.map(lambda ax: ("layers",) + tuple(ax), axes,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def encode(cfg: ModelConfig, params: Params, embeds: jax.Array,
+           rules: Optional[ShardingRules] = None) -> jax.Array:
+    """embeds: (B, S_enc, d) frame embeddings (frontend stub output)."""
+    rules = rules or default_rules()
+    cdt = _dtype(cfg.compute_dtype)
+    h = embeds.astype(cdt) + sinusoidal(embeds.shape[1],
+                                        cfg.d_model).astype(cdt)[None]
+    h = shard_constraint(h, rules, ("batch", "seq", "embed"))
+    positions = jnp.arange(embeds.shape[1])[None, :]
+
+    def body(h, bp):
+        y, _ = attention_block(bp["attn"], layernorm(bp["norm1"], h),
+                               n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                               head_dim=cfg.hd, positions=positions,
+                               causal=False, compute_dtype=cdt, rules=rules)
+        h = h + y
+        h = h + apply_mlp(cfg, bp["mlp"], layernorm(bp["norm2"], h), cdt)
+        return shard_constraint(h, rules, ("batch", "seq", "embed")), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["enc_blocks"])
+    return layernorm(params["enc_norm"], h)
+
+
+def _cross_attend(cfg: ModelConfig, bp: Pytree, h: jax.Array,
+                  enc_out: jax.Array, cdt, rules=None) -> jax.Array:
+    """Cross-attention: queries from decoder h, keys/values from enc_out."""
+    B, S, d = h.shape
+    hd = cfg.hd
+    q = linear(bp["cross_attn"]["wq"], h, cdt).reshape(B, S, cfg.n_heads, hd)
+    k = linear(bp["cross_attn"]["wk"], enc_out, cdt).reshape(
+        B, enc_out.shape[1], cfg.n_heads, hd)
+    v = linear(bp["cross_attn"]["wv"], enc_out, cdt).reshape(
+        B, enc_out.shape[1], cfg.n_heads, hd)
+    out = multihead_attention(q, k, v, n_kv=cfg.n_heads, causal=False,
+                              rules=rules)
+    return linear(bp["cross_attn"]["wo"], out.reshape(B, S, cfg.n_heads * hd),
+                  cdt)
+
+
+def decode(cfg: ModelConfig, params: Params, tokens: jax.Array,
+           enc_out: jax.Array, *, cache: Optional[Cache] = None,
+           update_cache: bool = False,
+           rules: Optional[ShardingRules] = None
+           ) -> Tuple[jax.Array, Optional[Cache]]:
+    """Decoder forward.  tokens (B, S); enc_out (B, S_enc, d)."""
+    rules = rules or default_rules()
+    cdt = _dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    h = embed(params["embed"], tokens, cdt) \
+        + sinusoidal(S, cfg.d_model, pos0).astype(cdt)[None]
+    h = shard_constraint(h, rules, ("batch", "seq", "embed"))
+    positions = pos0 + jnp.arange(S)[None, :]
+
+    def body(carry, xs):
+        h = carry
+        bp, kv_c = xs
+        y, new_kv = attention_block(
+            bp["self_attn"], layernorm(bp["norm1"], h),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, cache=kv_c, update_cache=update_cache,
+            compute_dtype=cdt, rules=rules)
+        h = h + y
+        h = h + _cross_attend(cfg, bp, layernorm(bp["norm_x"], h), enc_out,
+                              cdt, rules)
+        h = h + apply_mlp(cfg, bp["mlp"], layernorm(bp["norm2"], h), cdt)
+        h = shard_constraint(h, rules, ("batch", "seq", "embed"))
+        return h, (new_kv if new_kv is not None else kv_c)
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+    if cache is None:
+        h, _ = jax.lax.scan(lambda c, bp: body_fn(c, (bp, None)), h,
+                            params["dec_blocks"])
+        new_cache = None
+    else:
+        h, new_kv = jax.lax.scan(body_fn, h,
+                                 (params["dec_blocks"], cache["kv"]))
+        new_cache = {"kv": new_kv, "pos": pos0 + S,
+                     "enc_out": cache.get("enc_out", enc_out)} \
+            if update_cache else None
+    h = layernorm(params["dec_norm"], h)
+    logits = unembed(params["embed"], h, cdt)
+    return shard_constraint(logits, rules, ("batch", "seq", "vocab")), new_cache
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            rules: Optional[ShardingRules] = None) -> Tuple[jax.Array, Dict]:
+    enc_out = encode(cfg, params, batch["embeds"], rules)
+    logits, _ = decode(cfg, params, batch["tokens"], enc_out, rules=rules)
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"nll": loss, "aux": jnp.zeros(())}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int) -> Tuple[Cache, Pytree]:
+    kv = init_kv_cache(batch, max_seq, cfg.n_kv, cfg.hd)
+    c = {"kv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), kv),
+         "pos": jnp.zeros((), jnp.int32),
+         "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), jnp.bfloat16)}
+    a = {"kv": jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                            kv_cache_axes(),
+                            is_leaf=lambda x: isinstance(x, tuple)),
+         "pos": (),
+         "enc_out": ("batch", "seq", "embed")}
+    a["kv"]["pos"] = ("layers",)
+    return c, a
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Cache, rules: Optional[ShardingRules] = None
+                ) -> Tuple[jax.Array, Cache]:
+    cdt = _dtype(cfg.compute_dtype)
+    logits, new_cache = decode(cfg, params, tokens,
+                               cache["enc_out"].astype(cdt), cache=cache,
+                               update_cache=True, rules=rules)
+    return logits[:, -1], new_cache

@@ -1,0 +1,21 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify the
+transformer backbone only; input_specs() provides precomputed frame/patch
+embeddings).  These helpers exist so examples can fabricate deterministic
+embeddings shaped like a real frontend's output."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_patch_embeddings(key: jax.Array, batch: int, seq: int,
+                          d_model: int) -> jax.Array:
+    """Stands in for the LLaVA-NeXT anyres vision tower + projector."""
+    return jax.random.normal(key, (batch, seq, d_model), jnp.float32) * 0.02
+
+
+def fake_audio_frames(key: jax.Array, batch: int, frames: int,
+                      d_model: int) -> jax.Array:
+    """Stands in for whisper's log-mel + conv1d stem (stride-2 conv)."""
+    return jax.random.normal(key, (batch, frames, d_model), jnp.float32) * 0.02

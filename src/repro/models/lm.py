@@ -1,0 +1,384 @@
+"""Decoder LM covering the dense / moe / ssm / hybrid families.
+
+Layers are stacked on a leading ``layers`` axis and driven by
+``jax.lax.scan`` so the lowered HLO is O(1) in depth (critical for the
+512-device dry-run compile budget).  ``jax.checkpoint`` wraps the block body
+for training when ``cfg.remat``.  The hybrid family (zamba2) carries ONE
+shared attention+MLP block applied every ``cfg.attn_every`` layers via
+``lax.cond`` inside the scan, with per-application KV caches stacked in the
+carry.
+
+Batch dicts:
+  train   {"tokens"|"embeds", "labels", optional "mask"} -> scalar loss
+  prefill {"tokens"|"embeds"}                  -> (last-token logits, cache)
+  decode  {"tokens": (B,1)} + cache            -> (logits, new cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..nn.attention import (attention_block, init_attention, init_kv_cache,
+                            kv_cache_axes)
+from ..nn.layers import (embed, gelu, init_embedding, init_layernorm,
+                         init_linear, init_rmsnorm, layernorm, linear,
+                         rmsnorm, softmax_cross_entropy, swiglu, unembed)
+from ..nn.mamba2 import (init_mamba2, init_ssm_cache, mamba2_block,
+                         ssm_cache_axes)
+from ..nn.moe import init_moe, moe_block
+from ..nn.params import (Pytree, ShardingRules, default_rules,
+                         shard_constraint)
+
+Params = Pytree
+Cache = Dict[str, Any]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _dtype(s: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[s]
+
+
+def _norm_init(cfg: ModelConfig, d: int):
+    return (init_rmsnorm(d, dtype=_dtype(cfg.param_dtype))
+            if cfg.norm == "rmsnorm"
+            else init_layernorm(d, dtype=_dtype(cfg.param_dtype)))
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> Tuple[Pytree, Pytree]:
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    if cfg.act == "swiglu":
+        p["gate"], a["gate"] = init_linear(ks[0], cfg.d_model, cfg.d_ff,
+                                           out_axis="mlp", dtype=dtype)
+        p["up"], a["up"] = init_linear(ks[1], cfg.d_model, cfg.d_ff,
+                                       out_axis="mlp", dtype=dtype)
+    else:
+        p["up"], a["up"] = init_linear(ks[1], cfg.d_model, cfg.d_ff,
+                                       out_axis="mlp", dtype=dtype)
+    p["down"], a["down"] = init_linear(ks[2], cfg.d_ff, cfg.d_model,
+                                       in_axis="mlp", out_axis="embed",
+                                       dtype=dtype)
+    return p, a
+
+
+def apply_mlp(cfg: ModelConfig, p, x, compute_dtype):
+    if cfg.act == "swiglu":
+        return linear(p["down"], swiglu(linear(p["gate"], x, compute_dtype),
+                                        linear(p["up"], x, compute_dtype)),
+                      compute_dtype)
+    return linear(p["down"], gelu(linear(p["up"], x, compute_dtype)),
+                  compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> Tuple[Pytree, Pytree]:
+    """One layer's params (unstacked)."""
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    if cfg.family in ("ssm", "hybrid"):
+        p["norm1"], a["norm1"] = _norm_init(cfg, cfg.d_model)
+        p["mamba"], a["mamba"] = init_mamba2(
+            ks[0], cfg.d_model, d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+            expand=cfg.ssm_expand, n_groups=cfg.ssm_groups, dtype=dt)
+        return p, a
+    p["norm1"], a["norm1"] = _norm_init(cfg, cfg.d_model)
+    p["attn"], a["attn"] = init_attention(
+        ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dt)
+    p["norm2"], a["norm2"] = _norm_init(cfg, cfg.d_model)
+    if cfg.family == "moe":
+        p["moe"], a["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                      cfg.n_experts, dtype=dt)
+    else:
+        p["mlp"], a["mlp"] = init_mlp(ks[1], cfg, dt)
+    return p, a
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Pytree]:
+    dt = _dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["embed"], a["embed"] = init_embedding(k_emb, cfg.padded_vocab,
+                                            cfg.d_model, dtype=dt)
+    # stacked blocks
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    p["blocks"] = jax.vmap(lambda k: _init_block(k, cfg)[0])(keys)
+    a["blocks"] = _init_block_axes(cfg)
+    if cfg.family == "hybrid":
+        ks = jax.random.split(k_shared, 3)
+        sp: Dict[str, Any] = {}
+        sa: Dict[str, Any] = {}
+        sp["norm1"], sa["norm1"] = _norm_init(cfg, cfg.d_model)
+        sp["attn"], sa["attn"] = init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dt)
+        sp["norm2"], sa["norm2"] = _norm_init(cfg, cfg.d_model)
+        sp["mlp"], sa["mlp"] = init_mlp(ks[1], cfg, dt)
+        p["shared"] = sp
+        a["shared"] = sa
+    p["final_norm"], a["final_norm"] = _norm_init(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = init_linear(
+            k_head, cfg.d_model, cfg.padded_vocab, in_axis="embed", out_axis="vocab",
+            dtype=dt)
+    return p, a
+
+
+def _init_block_axes(cfg: ModelConfig) -> Pytree:
+    """Axes for one block, with the stacked 'layers' dim prepended.
+
+    Built from the *reduced* config — axis structure depends only on the
+    family/flags, never on dims — so no full-size allocation happens here.
+    """
+    _, axes = _init_block(jax.random.PRNGKey(0), cfg.reduced())
+    return jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax),
+        axes, is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Tuple[Cache, Pytree]:
+    """Stacked decode caches + their logical axes."""
+    c: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    if cfg.family in ("ssm", "hybrid"):
+        one = init_ssm_cache(batch, cfg.d_model, d_state=cfg.ssm_state,
+                             headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                             n_groups=cfg.ssm_groups)
+        c["ssm"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+        a["ssm"] = jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                                ssm_cache_axes(),
+                                is_leaf=lambda x: isinstance(x, tuple))
+        if cfg.family == "hybrid":
+            napp = cfg.n_shared_attn()
+            kv = init_kv_cache(batch, max_seq, cfg.n_kv, cfg.hd)
+            c["kv"] = {k: jnp.broadcast_to(kv[k], (napp,) + kv[k].shape)
+                       for k in ("k", "v")}
+            kv_ax = kv_cache_axes()
+            a["kv"] = {k: ("stage",) + tuple(kv_ax[k]) for k in ("k", "v")}
+        c["pos"] = jnp.zeros((), jnp.int32)
+        a["pos"] = ()
+    else:
+        kv = init_kv_cache(batch, max_seq, cfg.n_kv, cfg.hd)
+        c["kv"] = {k: jnp.broadcast_to(kv[k], (cfg.n_layers,) + kv[k].shape)
+                   for k in ("k", "v")}
+        kv_ax = kv_cache_axes()
+        a["kv"] = {k: ("layers",) + tuple(kv_ax[k]) for k in ("k", "v")}
+        c["pos"] = jnp.zeros((), jnp.int32)
+        a["pos"] = ()
+    return c, a
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _inputs_to_h(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+                 rules: ShardingRules, compute_dtype) -> jax.Array:
+    if "embeds" in batch:
+        h = batch["embeds"].astype(compute_dtype)
+    else:
+        h = embed(params["embed"], batch["tokens"], compute_dtype)
+    return shard_constraint(h, rules, ("batch", "seq", "embed"))
+
+
+def _logits(cfg: ModelConfig, params: Params, h: jax.Array,
+            rules: ShardingRules) -> jax.Array:
+    cdt = _dtype(cfg.compute_dtype)
+    h = _norm_apply(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        lg = unembed(params["embed"], h, cdt)
+    else:
+        lg = linear(params["lm_head"], h, cdt).astype(jnp.float32)
+    return shard_constraint(lg, rules, ("batch", "seq", "vocab"))
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, rules: Optional[ShardingRules] = None,
+            cache: Optional[Cache] = None, update_cache: bool = False,
+            mode: str = "train"
+            ) -> Tuple[jax.Array, jax.Array, Optional[Cache]]:
+    """Returns (logits, aux_loss, new_cache)."""
+    rules = rules or default_rules()
+    cdt = _dtype(cfg.compute_dtype)
+    h = _inputs_to_h(cfg, params, batch, rules, cdt)
+    B, S = h.shape[:2]
+    pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = pos0 + jnp.arange(S)[None, :]            # (1, S) broadcast
+
+    def block_fn(carry, xs):
+        h, aux, kvs = carry
+        if cfg.family in ("ssm", "hybrid"):
+            li, bp, ssm_c = xs
+            hin = _norm_apply(cfg, bp["norm1"], h)
+            y, new_ssm = mamba2_block(
+                bp["mamba"], hin, d_state=cfg.ssm_state,
+                headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                n_groups=cfg.ssm_groups, chunk=cfg.ssm_chunk,
+                cache=None if ssm_c is None else dict(ssm_c),
+                update_cache=update_cache or ssm_c is not None,
+                compute_dtype=cdt)
+            h = h + y
+            ys = new_ssm if new_ssm is not None else ssm_c
+            if cfg.family == "hybrid":
+                def with_attn(op):
+                    h, kvs = op
+                    sp = params["shared"]
+                    app = li // cfg.attn_every
+                    # page round trip per application: index this app's
+                    # (B, S, KV, D) page, update it, write it back.  A
+                    # carried stacked buffer measured worse (GSPMD lowers
+                    # dynamic-pos writes into the seq-sharded dim as
+                    # full-stack masked selects; EXPERIMENTS.md §Perf).
+                    page = None
+                    if kvs is not None:
+                        page = {"k": jax.lax.dynamic_index_in_dim(
+                                    kvs["k"], app, 0, keepdims=False),
+                                "v": jax.lax.dynamic_index_in_dim(
+                                    kvs["v"], app, 0, keepdims=False),
+                                "pos": pos0}
+                    y, new_kv = attention_block(
+                        sp["attn"], _norm_apply(cfg, sp["norm1"], h),
+                        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                        positions=positions, cache=page,
+                        update_cache=update_cache, rope_theta=cfg.rope_theta,
+                        compute_dtype=cdt, rules=rules)
+                    h = h + y
+                    h = h + apply_mlp(cfg, sp["mlp"],
+                                      _norm_apply(cfg, sp["norm2"], h), cdt)
+                    if page is not None and new_kv is not None:
+                        kvs = {k: jax.lax.dynamic_update_index_in_dim(
+                                   kvs[k], new_kv[k].astype(kvs[k].dtype),
+                                   app, 0) for k in ("k", "v")}
+                    return h, kvs
+
+                h, kvs = jax.lax.cond(li % cfg.attn_every == 0,
+                                      with_attn, lambda op: op, (h, kvs))
+            h = shard_constraint(h, rules, ("batch", "seq", "embed"))
+            return (h, aux, kvs), ys
+
+        li, bp, kv_page = xs
+        page = None if kv_page is None else {"k": kv_page["k"],
+                                             "v": kv_page["v"], "pos": pos0}
+        y, new_kv = attention_block(
+            bp["attn"], _norm_apply(cfg, bp["norm1"], h),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, cache=page, update_cache=update_cache,
+            rope_theta=cfg.rope_theta, compute_dtype=cdt, rules=rules)
+        h = h + y
+        hin = _norm_apply(cfg, bp["norm2"], h)
+        if cfg.family == "moe":
+            y2, a = moe_block(bp["moe"], hin, n_experts=cfg.n_experts,
+                              top_k=cfg.top_k,
+                              capacity_factor=cfg.capacity_factor,
+                              dispatch_groups=cfg.moe_dispatch_groups,
+                              rules=rules, compute_dtype=cdt)
+            aux = aux + a
+        else:
+            y2 = apply_mlp(cfg, bp["mlp"], hin, cdt)
+        h = h + y2
+        h = shard_constraint(h, rules, ("batch", "seq", "embed"))
+        ys = None if new_kv is None else {"k": new_kv["k"], "v": new_kv["v"]}
+        return (h, aux, kvs), ys
+
+    body = jax.checkpoint(block_fn) if (cfg.remat and mode == "train") \
+        else block_fn
+
+    layer_ids = jnp.arange(cfg.n_layers)
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        kvs0 = cache.get("kv") if (cache is not None
+                                   and cfg.family == "hybrid") else None
+        if cache is None:
+            def body2(carry, xs2):
+                li, bp = xs2
+                return body(carry, (li, bp, None))
+            (h, aux, kvs), _ = jax.lax.scan(
+                body2, (h, aux0, kvs0), (layer_ids, params["blocks"]))
+            new_cache = None
+            if update_cache:
+                raise ValueError("update_cache requires an initialized cache")
+        else:
+            (h, aux, kvs), new_ssm = jax.lax.scan(
+                body, (h, aux0, kvs0),
+                (layer_ids, params["blocks"], cache["ssm"]))
+            new_cache = None
+            if update_cache:
+                new_cache = {"ssm": new_ssm, "pos": pos0 + S}
+                if cfg.family == "hybrid":
+                    new_cache["kv"] = kvs
+    else:
+        if cache is None:
+            def body2(carry, xs2):
+                li, bp = xs2
+                return body(carry, (li, bp, None))
+            (h, aux, _), _ = jax.lax.scan(
+                body2, (h, aux0, None), (layer_ids, params["blocks"]))
+            new_cache = None
+        else:
+            # page-streaming cache: each layer's (B, S, KV, D) page flows
+            # through scan xs -> ys.  Measured better than a carried
+            # stacked buffer, whose dynamic-pos write into the seq-sharded
+            # dim lowers to full-buffer masked selects (EXPERIMENTS §Perf).
+            (h, aux, _), new_kv = jax.lax.scan(
+                body, (h, aux0, None),
+                (layer_ids, params["blocks"],
+                 {"k": cache["kv"]["k"], "v": cache["kv"]["v"]}))
+            new_cache = {"kv": new_kv, "pos": pos0 + S} \
+                if update_cache else None
+
+    logits = _logits(cfg, params, h, rules)
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            rules: Optional[ShardingRules] = None) -> Tuple[jax.Array, Dict]:
+    logits, aux, _ = forward(cfg, params, batch, rules=rules, mode="train")
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"nll": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            cache: Cache, rules: Optional[ShardingRules] = None
+            ) -> Tuple[jax.Array, Cache]:
+    logits, _, new_cache = forward(cfg, params, batch, rules=rules,
+                                   cache=cache, update_cache=True,
+                                   mode="prefill")
+    return logits[:, -1], new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Cache, rules: Optional[ShardingRules] = None
+                ) -> Tuple[jax.Array, Cache]:
+    """tokens: (B, 1) -> (logits (B, vocab), new cache)."""
+    logits, _, new_cache = forward(cfg, params, {"tokens": tokens},
+                                   rules=rules, cache=cache,
+                                   update_cache=True, mode="decode")
+    return logits[:, -1], new_cache

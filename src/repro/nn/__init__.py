@@ -1,0 +1,14 @@
+"""Functional NN substrate: params-as-pytrees, logical sharding axes."""
+
+from .attention import (attention_block, init_attention, init_kv_cache,
+                        kv_cache_axes, multihead_attention)
+from .layers import (embed, gelu, init_embedding, init_layernorm, init_linear,
+                     init_rmsnorm, layernorm, linear, rmsnorm,
+                     softmax_cross_entropy, swiglu, unembed)
+from .mamba2 import (init_mamba2, init_ssm_cache, mamba2_block, ssd_chunked,
+                     ssd_decode_step, ssm_cache_axes)
+from .moe import init_moe, moe_block
+from .params import (ShardingRules, count_params, default_rules, param_bytes,
+                     shard_constraint, tree_shape_structs, tree_sharding,
+                     tree_spec)
+from .rope import apply_rope

@@ -1,0 +1,271 @@
+"""GQA attention with rope, qk-norm, KV cache, and a flash-style
+memory-efficient jnp path (online softmax over KV blocks).
+
+The jnp block-scan path is the mathematical twin of the Pallas kernel in
+``repro.kernels.flash_attention`` and is what the 512-device dry-run lowers
+(Pallas TPU kernels cannot compile on the CPU backend); the Pallas kernel is
+validated against it in interpret mode.  GQA never materializes repeated KV
+heads: queries are reshaped to (KV, G) groups instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, rmsnorm
+from .params import Pytree
+from .rope import apply_rope
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key: jax.Array, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: Optional[int] = None, *, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32
+                   ) -> Tuple[Pytree, Pytree]:
+    hd = head_dim or d_model // n_heads
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["wq"], a["wq"] = init_linear(ks[0], d_model, n_heads * hd,
+                                   bias=qkv_bias, out_axis="heads", dtype=dtype)
+    p["wk"], a["wk"] = init_linear(ks[1], d_model, n_kv * hd,
+                                   bias=qkv_bias, out_axis="heads", dtype=dtype)
+    p["wv"], a["wv"] = init_linear(ks[2], d_model, n_kv * hd,
+                                   bias=qkv_bias, out_axis="heads", dtype=dtype)
+    p["wo"], a["wo"] = init_linear(ks[3], n_heads * hd, d_model,
+                                   in_axis="heads", out_axis="embed", dtype=dtype)
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype=dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype=dtype)}
+        a["q_norm"] = {"scale": ("head_dim",)}
+        a["k_norm"] = {"scale": ("head_dim",)}
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_path(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: Optional[jax.Array], scale: float
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Plain einsum attention (small seqs / decode).  q:(B,Sq,KV,G,D).
+    Returns (out, running-max m, denominator l), both (B,KV,G,Sq)."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v) \
+        / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out, m, l
+
+
+def merge_attention(o1: jax.Array, m1: jax.Array, l1: jax.Array,
+                    o2: jax.Array, m2: jax.Array, l2: jax.Array
+                    ) -> jax.Array:
+    """Online-softmax merge of two partial attentions over disjoint KV sets.
+
+    o: (B,Sq,H,D); m/l: (B,H,Sq) [flattened (KV,G)].  Lets decode attend
+    the old cache pages and the new segment separately, so the stacked
+    cache buffer is WRITE-ONLY within a scan iteration (no copy insertion).
+    """
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m) * l1
+    a2 = jnp.exp(m2 - m) * l2
+    denom = jnp.maximum(a1 + a2, 1e-30)
+    w1 = (a1 / denom).transpose(0, 2, 1)[..., None]       # (B,Sq,H,1)
+    w2 = (a2 / denom).transpose(0, 2, 1)[..., None]
+    return o1 * w1.astype(o1.dtype) + o2 * w2.astype(o2.dtype)
+
+
+def _flash_path(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                q_offset: jax.Array, kv_len: Optional[jax.Array],
+                scale: float, block: int) -> jax.Array:
+    """Online-softmax scan over KV blocks; never materializes (Sq, Sk)."""
+    B, Sq, KV, G, D = q.shape
+    Sk = k.shape[1]
+    n_blocks = -(-Sk // block)
+    pad = n_blocks * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blocks, block, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block, KV, D).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)                    # (Sq,)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        bi, kblk, vblk = inputs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, kblk).astype(jnp.float32) * scale
+        kv_pos = bi * block + jnp.arange(block)          # (block,)
+        msk = jnp.ones((Sq, block), dtype=bool)
+        if causal:
+            msk &= q_pos[:, None] >= kv_pos[None, :]
+        if kv_len is not None:
+            msk &= kv_pos[None, :] < kv_len
+        msk &= kv_pos[None, :] < Sk                      # padding
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, D), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_blocks), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype), m, l  # (B,Sq,KV,G,D)
+
+
+def multihead_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        n_kv: int, causal: bool = True,
+                        q_offset: jax.Array | int = 0,
+                        kv_len: Optional[jax.Array] = None,
+                        block: int = 1024,
+                        force_flash: Optional[bool] = None,
+                        rules=None, return_stats: bool = False):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D).  Returns (B,Sq,H,D).
+
+    With ``rules.repeat_kv`` the GQA groups are materialized to full heads
+    (Megatron TP layout — transient tensors only, the KV cache stays GQA) so
+    the head dim shards when n_kv doesn't divide the model axis.  Activation
+    sharding constraints use the ``act_seq`` / ``act_kv`` rules.
+    """
+    from .params import shard_constraint
+    B, Sq, H, D = q.shape
+    if rules is not None and rules.repeat_kv and n_kv != H:
+        k = jnp.repeat(k, H // n_kv, axis=2)
+        v = jnp.repeat(v, H // n_kv, axis=2)
+        n_kv = H
+    Sk = k.shape[1]
+    G = H // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, D)
+    if rules is not None:
+        qg = shard_constraint(qg, rules,
+                              ("batch", "act_seq", "act_kv", "act_group", None))
+        k = shard_constraint(k, rules, ("batch", "act_kv_seq", "act_kv", None))
+        v = shard_constraint(v, rules, ("batch", "act_kv_seq", "act_kv", None))
+    scale = 1.0 / (D ** 0.5)
+    use_flash = (Sq * Sk > 256 * 2048) if force_flash is None else force_flash
+    if use_flash and Sq > 1:
+        out, m, l = _flash_path(qg, k, v, causal=causal,
+                                q_offset=jnp.asarray(q_offset), kv_len=kv_len,
+                                scale=scale, block=block)
+    else:
+        q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+        kv_pos = jnp.arange(Sk)
+        msk = jnp.ones((Sq, Sk), dtype=bool)
+        if causal:
+            msk &= q_pos[:, None] >= kv_pos[None, :]
+        if kv_len is not None:
+            msk &= kv_pos[None, :] < kv_len
+        out, m, l = _gqa_scores_path(qg, k, v, msk[None, None, None], scale)
+    out = out.reshape(B, Sq, H, D)
+    if return_stats:
+        return out, m.reshape(B, H, Sq), l.reshape(B, H, Sq)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full block: project -> rope -> attend -> out-project, with KV cache
+# ---------------------------------------------------------------------------
+
+def attention_block(p: Pytree, x: jax.Array, *, n_heads: int, n_kv: int,
+                    head_dim: Optional[int] = None, positions: jax.Array,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_stack: Optional[Tuple] = None,
+                    update_cache: bool = False,
+                    rope_theta: float = 10000.0,
+                    qk_norm_eps: float = 1e-6,
+                    causal: bool = True,
+                    compute_dtype=jnp.bfloat16,
+                    block: int = 1024,
+                    rules=None
+                    ) -> Tuple[jax.Array, Optional[Any]]:
+    """x: (B, S, d).
+
+    Two cache modes:
+      * ``cache``       — per-layer dict {"k","v","pos"}; the segment is
+        appended into a copy (legacy path, used by tests/small models).
+      * ``cache_stack`` — ``(k_stack, v_stack, layer_idx, pos)`` where the
+        stacks are (L, B, S_max, KV, D) scan-carry buffers.  The new
+        segment is written straight into the stacked buffer (one
+        token/segment-sized dynamic-update-slice — NOT a whole-layer-cache
+        round trip), then the layer's page is read for attention.  This is
+        the decode-bandwidth fix measured in EXPERIMENTS.md §Perf.
+    """
+    B, S, d = x.shape
+    hd = head_dim or d // n_heads
+    q = linear(p["wq"], x, compute_dtype).reshape(B, S, n_heads, hd)
+    k = linear(p["wk"], x, compute_dtype).reshape(B, S, n_kv, hd)
+    v = linear(p["wv"], x, compute_dtype).reshape(B, S, n_kv, hd)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, qk_norm_eps)
+        k = rmsnorm(p["k_norm"], k, qk_norm_eps)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache_stack is not None:
+        # Attend the OLD cache pages and the new segment separately, then
+        # merge with online-softmax stats.  The stacked buffer is read
+        # (old content) before its only write, so XLA keeps it in place —
+        # no whole-buffer copy per scan iteration (§Perf iteration 3).
+        k_stack, v_stack, li, pos = cache_stack
+        ck = jax.lax.dynamic_index_in_dim(k_stack, li, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(v_stack, li, 0, keepdims=False)
+        o_old, m_old, l_old = multihead_attention(
+            q, ck.astype(compute_dtype), cv.astype(compute_dtype),
+            n_kv=n_kv, causal=False, kv_len=pos, block=block, rules=rules,
+            return_stats=True)
+        o_new, m_new, l_new = multihead_attention(
+            q, k, v, n_kv=n_kv, causal=causal, block=block, rules=rules,
+            return_stats=True)
+        out = merge_attention(o_old, m_old, l_old, o_new, m_new, l_new)
+        k_stack = jax.lax.dynamic_update_slice(
+            k_stack, k[None].astype(k_stack.dtype), (li, 0, pos, 0, 0))
+        v_stack = jax.lax.dynamic_update_slice(
+            v_stack, v[None].astype(v_stack.dtype), (li, 0, pos, 0, 0))
+        new_cache = (k_stack, v_stack)
+    elif cache is not None:
+        idx = cache["pos"]                                 # scalar int32
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        kv_len = idx + S
+        out = multihead_attention(q, ck.astype(compute_dtype),
+                                  cv.astype(compute_dtype), n_kv=n_kv,
+                                  causal=causal, q_offset=idx, kv_len=kv_len,
+                                  block=block, rules=rules)
+        if update_cache:
+            new_cache = {"k": ck, "v": cv, "pos": idx + S}
+    else:
+        out = multihead_attention(q, k, v, n_kv=n_kv, causal=causal,
+                                  block=block, rules=rules)
+    y = linear(p["wo"], out.reshape(B, S, n_heads * hd), compute_dtype)
+    return y, new_cache
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {"k": jnp.zeros((batch, max_seq, n_kv, head_dim), dtype=dtype),
+            "v": jnp.zeros((batch, max_seq, n_kv, head_dim), dtype=dtype),
+            "pos": jnp.zeros((), dtype=jnp.int32)}
+
+
+def kv_cache_axes() -> Dict[str, Any]:
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "pos": ()}

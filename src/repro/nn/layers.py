@@ -1,0 +1,103 @@
+"""Core functional layers: linear, norms, embedding.
+
+Convention: ``init_x(key, ...) -> (params, axes)`` where ``axes`` mirrors the
+params pytree with logical axis tuples (see params.py).  Apply functions are
+pure; compute happens in ``cfg.compute_dtype`` while params are stored in
+``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import Axes, Pytree
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, *, bias: bool = False,
+                in_axis: Optional[str] = "embed", out_axis: Optional[str] = "mlp",
+                dtype=jnp.float32, scale: Optional[float] = None
+                ) -> Tuple[Pytree, Pytree]:
+    scale = (1.0 / (d_in ** 0.5)) if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    a = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+        a["b"] = (out_axis,)
+    return p, a
+
+
+def linear(p: Pytree, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32,
+                 axis: Optional[str] = "embed") -> Tuple[Pytree, Pytree]:
+    return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": (axis,)}
+
+
+def rmsnorm(p: Pytree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32,
+                   axis: Optional[str] = "embed") -> Tuple[Pytree, Pytree]:
+    p = {"scale": jnp.ones((d,), dtype=dtype),
+         "bias": jnp.zeros((d,), dtype=dtype)}
+    return p, {"scale": (axis,), "bias": (axis,)}
+
+
+def layernorm(p: Pytree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int,
+                   dtype=jnp.float32) -> Tuple[Pytree, Pytree]:
+    e = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"embedding": e.astype(dtype)}, {"embedding": ("vocab", "embed")}
+
+
+def embed(p: Pytree, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return p["embedding"].astype(compute_dtype)[tokens]
+
+
+def unembed(p: Pytree, x: jax.Array,
+            compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Tied logits: (..., d) @ (vocab, d)^T -> (..., vocab), fp32 logits."""
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      p["embedding"].astype(compute_dtype)
+                      ).astype(jnp.float32)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL; logits (..., V) fp32, labels int (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024): within a chunk the dual quadratic
+form computes token mixing; across chunks a small (H, N, P) state is carried
+by an associative recurrence (lax.scan).  Decode is the O(1) recurrent
+update.  The per-chunk quadratic form is the compute hot-spot and has a
+Pallas twin in ``repro.kernels.mamba_ssd`` (validated in interpret mode).
+
+Shapes: x (B, L, H, P) heads x headdim; B/C (B, L, G, N) groups x state;
+dt (B, L, H); A (H,) negative reals.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, init_rmsnorm, linear, rmsnorm
+from .params import Pytree
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int = 256,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    f32 = jnp.float32
+    xb = (x * dt[..., None]).astype(f32)                   # discretized input
+    dA = dt.astype(f32) * A.astype(f32)                    # (B, Lp, H), <= 0
+    xc = xb.reshape(Bsz, nc, chunk, H, P)
+    dAc = dA.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+
+    cum = jnp.cumsum(dAc, axis=2)                          # (B,nc,Q,H)
+    tot = cum[:, :, -1]                                    # (B,nc,H)
+
+    # ---- intra-chunk (dual quadratic form) --------------------------------
+    # Lmat[b,c,h,i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(diff), 0.0)           # (B,nc,Qi,Qj,H)
+    # scores[b,c,i,j,g] = C_i . B_j
+    scores = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)
+    scores = jnp.repeat(scores, rep, axis=-1)              # -> (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", scores, Lmat, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(tot[:, :, None, :] - cum)       # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # (B,nc,Q,H,N)
+    S = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bh, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    s0 = (jnp.zeros((Bsz, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(h, inp):
+        tot_c, S_c = inp                                   # (B,H), (B,H,N,P)
+        h_next = h * jnp.exp(tot_c)[..., None, None] + S_c
+        return h_next, h                                   # emit state BEFORE chunk
+
+    (h_final, h_before) = jax.lax.scan(
+        step, s0, (tot.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    Ch = jnp.repeat(Cc, rep, axis=3)                       # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch, h_before,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, Lp, H, P)[:, :L]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                    Cm: jax.Array, state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrent update.  x (B,H,P), dt (B,H), Bm/Cm (B,G,N),
+    state (B,H,N,P)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))           # (B,H)
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=1)           # (B,H,N)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=1)
+    xb = (x * dt[..., None]).astype(f32)                   # (B,H,P)
+    new_state = state * dA[..., None, None] \
+        + Bh[..., None] * xb[:, :, None, :]                # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key: jax.Array, d_model: int, *, d_state: int = 128,
+                headdim: int = 64, expand: int = 2, n_groups: int = 1,
+                d_conv: int = 4, dtype=jnp.float32) -> Tuple[Pytree, Pytree]:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    p: Dict = {}
+    a: Dict = {}
+    p["in_proj"], a["in_proj"] = init_linear(ks[0], d_model, d_in_proj,
+                                             out_axis="mlp", dtype=dtype)
+    p["conv_w"] = (jax.random.normal(ks[1], (d_conv, conv_ch), jnp.float32)
+                   * (1.0 / d_conv ** 0.5)).astype(dtype)
+    a["conv_w"] = ("conv", "mlp")
+    p["conv_b"] = jnp.zeros((conv_ch,), dtype=dtype)
+    a["conv_b"] = ("mlp",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype)
+    a["A_log"] = (None,)
+    p["D"] = jnp.ones((n_heads,), dtype=dtype)
+    a["D"] = (None,)
+    p["dt_bias"] = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[2], (n_heads,), jnp.float32,
+                                   jnp.log(1e-3), jnp.log(1e-1))))).astype(dtype)
+    a["dt_bias"] = (None,)
+    p["norm"], a["norm"] = init_rmsnorm(d_inner, dtype=dtype, axis="mlp")
+    p["out_proj"], a["out_proj"] = init_linear(ks[3], d_inner, d_model,
+                                               in_axis="mlp", out_axis="embed",
+                                               dtype=dtype)
+    return p, a
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x (B,L,C), w (K,C).  Returns (y, tail)."""
+    K = w.shape[0]
+    ctx = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype) \
+        if prev is None else prev.astype(x.dtype)
+    xp = jnp.concatenate([ctx, x], axis=1)                 # (B, L+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    tail = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(y + b[None, None]), tail
+
+
+def mamba2_block(p: Pytree, x: jax.Array, *, d_state: int, headdim: int = 64,
+                 expand: int = 2, n_groups: int = 1, d_conv: int = 4,
+                 chunk: int = 256,
+                 cache: Optional[Dict[str, jax.Array]] = None,
+                 update_cache: bool = False,
+                 compute_dtype=jnp.bfloat16
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d_model).  Cache: {"conv": (B,K-1,Cc), "state": (B,H,N,P)}."""
+    B, S, d = x.shape
+    d_inner = expand * d
+    H = d_inner // headdim
+    GN = n_groups * d_state
+
+    zxbcdt = linear(p["in_proj"], x, compute_dtype)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + GN, 2 * d_inner + 2 * GN],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_prev = cache["conv"] if cache is not None else None
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"].astype(compute_dtype),
+                                       p["conv_b"].astype(compute_dtype),
+                                       conv_prev)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + GN], axis=-1)
+    xh = xin.reshape(B, S, H, headdim)
+    Bm = Bm.reshape(B, S, n_groups, d_state)
+    Cm = Cm.reshape(B, S, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is not None and S == 1:
+        y1, new_state = ssd_decode_step(xh[:, 0], dt[:, 0], A, Bm[:, 0],
+                                        Cm[:, 0], cache["state"])
+        y = y1[:, None]
+    else:
+        init_state = cache["state"] if cache is not None else None
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk,
+                                   init_state=init_state)
+    if update_cache:
+        new_cache = {"conv": conv_tail.astype(jnp.bfloat16),
+                     "state": new_state.astype(jnp.float32)}
+
+    y = y + xh * p["D"].astype(compute_dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    return linear(p["out_proj"], y, compute_dtype), new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, *, d_state: int,
+                   headdim: int = 64, expand: int = 2, n_groups: int = 1,
+                   d_conv: int = 4) -> Dict[str, jax.Array]:
+    d_inner = expand * d_model
+    H = d_inner // headdim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    return {"conv": jnp.zeros((batch, d_conv - 1, conv_ch), jnp.bfloat16),
+            "state": jnp.zeros((batch, H, d_state, headdim), jnp.float32)}
+
+
+def ssm_cache_axes() -> Dict[str, Tuple]:
+    return {"conv": ("batch", None, "mlp"),
+            "state": ("batch", "heads", None, None)}

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch (GSPMD-friendly).
+
+Top-k routing -> position-in-expert via cumulative sums -> scatter tokens
+into an (E, C, d) buffer -> batched expert SwiGLU -> combine with router
+weights.  Tokens beyond capacity are dropped (weights renormalized), the
+standard capacity-factor scheme.  Expert weights are stacked on a leading
+``experts`` axis; the dispatch buffer shards tokens on ``batch`` and the
+expert FFN hidden dim on ``mlp`` so any expert count works on any mesh.
+Router runs in fp32 with an auxiliary load-balancing loss (Switch-style).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, swiglu
+from .params import Pytree
+
+
+def init_moe(key: jax.Array, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32) -> Tuple[Pytree, Pytree]:
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / (d_model ** 0.5)
+    s_out = 1.0 / (d_ff ** 0.5)
+
+    def stack(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": init_linear(ks[0], d_model, n_experts, out_axis=None,
+                              dtype=jnp.float32)[0],
+        "w_gate": stack(ks[1], (n_experts, d_model, d_ff), s_in),
+        "w_up": stack(ks[2], (n_experts, d_model, d_ff), s_in),
+        "w_down": stack(ks[3], (n_experts, d_ff, d_model), s_out),
+    }
+    a = {
+        "router": {"w": ("embed", None)},
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    return p, a
+
+
+def moe_block(p: Pytree, x: jax.Array, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, dispatch_groups: int = 0,
+              rules=None, compute_dtype=jnp.bfloat16
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    ``dispatch_groups > 1`` switches to group-local dispatch: tokens are
+    split into G groups aligned with the data shards, each group fills its
+    OWN (E, C/G, d) buffer slice (local cumsums, local scatter).  Under
+    GSPMD this removes the all-reduce of the whole dispatch buffer across
+    the data axis that the flat scatter requires — the dominant collective
+    for many-expert models (EXPERIMENTS.md §Perf, granite-moe).  Capacity
+    is per group, so drop behavior matches a data-parallel Switch/GShard
+    deployment.
+    """
+    B, S, d = x.shape
+    T = B * S
+    G = dispatch_groups if dispatch_groups and T % dispatch_groups == 0 \
+        and (T // dispatch_groups) >= top_k else 0
+    if G > 1:
+        return _moe_grouped(p, x, n_experts=n_experts, top_k=top_k,
+                            capacity_factor=capacity_factor, groups=G,
+                            rules=rules, compute_dtype=compute_dtype)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * top_k * T / n_experts))
+
+    # position of each (token, slot) within its expert, priority by slot then
+    # token order (Switch Transformer scheme)
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # (T,k,E)
+    slot_rank = jnp.cumsum(onehot.reshape(T * top_k, n_experts), axis=0) \
+        .reshape(T, top_k, n_experts) - 1
+    pos = (slot_rank * onehot).sum(-1)                         # (T, k)
+    expert = gate_idx                                          # (T, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    # scatter tokens into (E, C, d)
+    buf = jnp.zeros((n_experts, capacity, d), dtype=compute_dtype)
+    flat_e = expert.reshape(-1)
+    flat_p = jnp.where(keep, pos, capacity).reshape(-1)        # OOB drops
+    tok_rep = jnp.repeat(jnp.arange(T), top_k)
+    buf = buf.at[flat_e, flat_p].set(
+        xt[tok_rep].astype(compute_dtype), mode="drop")
+
+    # batched expert SwiGLU: (E, C, d) x (E, d, f)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(compute_dtype))
+    h = swiglu(g, u)
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(compute_dtype))
+
+    # gather back and combine
+    out = (eo[flat_e, jnp.minimum(flat_p, capacity - 1)]      # (T*k, d)
+           * gate_vals.reshape(-1, 1).astype(compute_dtype))
+    out = jax.ops.segment_sum(out, tok_rep, num_segments=T)
+
+    # Switch aux loss: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean((onehot.sum(axis=1)).astype(jnp.float32), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_grouped(p: Pytree, x: jax.Array, *, n_experts: int, top_k: int,
+                 capacity_factor: float, groups: int, rules,
+                 compute_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Group-local capacity dispatch (see moe_block docstring)."""
+    from .params import shard_constraint
+    B, S, d = x.shape
+    T = B * S
+    Tl = T // groups
+    xt = x.reshape(groups, Tl, d)
+    if rules is not None:
+        xt = shard_constraint(xt, rules, ("batch", None, "embed"))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # (G, Tl, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * top_k * Tl / n_experts))
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)
+    slot_rank = jnp.cumsum(
+        onehot.reshape(groups, Tl * top_k, n_experts), axis=1) \
+        .reshape(groups, Tl, top_k, n_experts) - 1          # group-LOCAL
+    pos = (slot_rank * onehot).sum(-1)                      # (G, Tl, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    def dispatch_one(xg, eg, pg):
+        buf = jnp.zeros((n_experts, capacity, d), dtype=compute_dtype)
+        tok_rep = jnp.repeat(jnp.arange(Tl), top_k)
+        return buf.at[eg.reshape(-1), pg.reshape(-1)].set(
+            xg[tok_rep].astype(compute_dtype), mode="drop")
+
+    flat_p = jnp.where(keep, pos, capacity)
+    buf = jax.vmap(dispatch_one)(xt, gate_idx, flat_p)      # (G, E, C, d)
+    if rules is not None:
+        buf = shard_constraint(buf, rules,
+                               ("batch", "experts", None, "embed"))
+
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(compute_dtype))
+    h = swiglu(g, u)
+    eo = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(compute_dtype))
+
+    def combine_one(eog, eg, pg, gv):
+        tok_rep = jnp.repeat(jnp.arange(Tl), top_k)
+        out = eog[eg.reshape(-1), jnp.minimum(pg.reshape(-1), capacity - 1)] \
+            * gv.reshape(-1, 1).astype(compute_dtype)
+        return jax.ops.segment_sum(out, tok_rep, num_segments=Tl)
+
+    out = jax.vmap(combine_one)(eo, gate_idx, flat_p, gate_vals)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(onehot.sum(axis=2).astype(jnp.float32), axis=(0, 1))
+    aux = n_experts * jnp.sum(me * ce)
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,139 @@
+"""Parameter pytrees with logical sharding axes (no flax).
+
+Every ``init_*`` function returns a pytree of ``jnp`` arrays; a parallel
+pytree of *logical axis tuples* describes how each array dim shards.  Logical
+axes resolve to mesh axes through ``ShardingRules`` — swap the rules, not the
+model, to change the parallelism layout (this is how §Perf hillclimbing
+iterates shardings).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+Axes = Tuple[Optional[str], ...]
+
+
+# Default logical->mesh rules.  None = replicated dim.
+# Parameters are 2-D sharded: FSDP over "data" (the `embed` axis) x TP over
+# "model" (heads / mlp / vocab) — the MaxText-style default.  GSPMD inserts
+# the FSDP all-gathers; they show up in the roofline collective term.
+DEFAULT_RULES: Dict[str, Union[None, str, Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "embed": "data",            # d_model dim of weights -> FSDP shard
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",             # FFN hidden
+    "experts": "model",
+    "expert_mlp": None,
+    "seq": None,
+    "kv_seq": "model",          # decode KV-cache sequence dim
+    "layers": None,             # stacked-scan leading dim
+    "conv": None,
+    "state": None,
+    "stage": None,
+    # attention activation layout (derived per arch x mesh in launch/steps):
+    #   act_kv='model'  when (repeated) head count divides the model axis,
+    #   act_seq='model' (context parallel) otherwise.
+    "act_seq": None,
+    "act_kv": "model",
+    "act_kv_seq": None,         # decode: KV-cache seq dim inside attention
+    "act_group": None,
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Mapping[str, Union[None, str, Tuple[str, ...]]]
+    repeat_kv: bool = False     # materialize GQA kv->H heads in attention
+                                # (Megatron-style TP trick; transient only)
+
+    def spec(self, axes: Axes, mesh: Optional[Mesh] = None) -> P:
+        out = []
+        used: set = set()
+        for a in axes:
+            if a is None:
+                out.append(None)
+                continue
+            m = self.rules.get(a)
+            if m is None:
+                out.append(None)
+                continue
+            names = (m,) if isinstance(m, str) else tuple(m)
+            if mesh is not None:
+                names = tuple(n for n in names if n in mesh.axis_names)
+            names = tuple(n for n in names if n not in used)
+            used.update(names)
+            if not names:
+                out.append(None)
+            elif len(names) == 1:
+                out.append(names[0])
+            else:
+                out.append(names)
+        return P(*out)
+
+    def replace_rules(self, **kw) -> "ShardingRules":
+        d = dict(self.rules)
+        repeat = kw.pop("repeat_kv", self.repeat_kv)
+        d.update(kw)
+        return ShardingRules(d, repeat_kv=repeat)
+
+
+def default_rules(**overrides) -> ShardingRules:
+    d = dict(DEFAULT_RULES)
+    repeat = overrides.pop("repeat_kv", False)
+    d.update(overrides)
+    return ShardingRules(d, repeat_kv=repeat)
+
+
+def tree_spec(axes_tree: Pytree, rules: ShardingRules,
+              mesh: Optional[Mesh] = None) -> Pytree:
+    """Logical-axes pytree -> PartitionSpec pytree."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes, mesh),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_sharding(axes_tree: Pytree, rules: ShardingRules,
+                  mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        tree_spec(axes_tree, rules, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_constraint(x: jax.Array, rules: ShardingRules, axes: Axes,
+                     mesh: Optional[Mesh] = None) -> jax.Array:
+    """with_sharding_constraint via logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(axes, mesh))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def count_params(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def tree_shape_structs(tree: Pytree) -> Pytree:
+    """Array pytree -> ShapeDtypeStruct pytree (for .lower without data)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def abstract_init(init_fn: Callable[..., Pytree], *args, **kw) -> Pytree:
+    """Evaluate an init function abstractly (no memory) -> ShapeDtypeStructs."""
+    return jax.eval_shape(init_fn, *args, **kw)

@@ -1,0 +1,4 @@
+from .adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                    compress_int8, decompress_int8, ef_compress_tree,
+                    global_norm, init_error_state, init_opt_state,
+                    lr_schedule, zero1_axes)

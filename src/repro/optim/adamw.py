@@ -1,0 +1,151 @@
+"""AdamW with decoupled weight decay, global-norm clipping, microbatch
+gradient accumulation and optional int8 error-feedback gradient compression.
+
+No optax in this environment — implemented directly on pytrees.  Optimizer
+state can be ZeRO-1 sharded (see ``zero1_axes`` — the m/v trees get an extra
+mesh-axis sharding on their largest dim where divisible), which is one of the
+§Perf hillclimb knobs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params: Pytree) -> Dict[str, Pytree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Pytree, grads: Pytree,
+                 opt: Dict[str, Pytree]) -> Tuple[Pytree, Dict[str, Pytree],
+                                                  Dict[str, jax.Array]]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = opt["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p - (lr * delta).astype(p.dtype)), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (beyond-paper distributed trick)
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads: Pytree, error: Pytree
+                     ) -> Tuple[Pytree, Pytree, Pytree]:
+    """Error-feedback int8: returns (quantized, scales, new_error)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress_int8(gf)
+        deq = decompress_int8(q, s)
+        return q, s, gf - deq
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]),
+            jax.tree.unflatten(tdef, [o[2] for o in outs]))
+
+
+def init_error_state(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding helper
+# ---------------------------------------------------------------------------
+
+def zero1_axes(param_axes: Pytree, shapes: Pytree, shard_axis: str = "data",
+               mesh_size: int = 16) -> Pytree:
+    """Optimizer-state logical axes: add ``opt_shard`` on the largest
+    unsharded divisible dim of each param (maps to the data axis)."""
+    def one(axes, shape):
+        axes = tuple(axes)
+        best, best_dim = None, -1
+        for i, (a, d) in enumerate(zip(axes, shape.shape)):
+            if a is None and d % mesh_size == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best is None:
+            return axes
+        return axes[:best] + ("opt_shard",) + axes[best + 1:]
+    return jax.tree.map(
+        one, param_axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))

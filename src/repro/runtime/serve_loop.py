@@ -1,0 +1,109 @@
+"""Batched serving loop: wave-style continuous batching.
+
+Requests queue up; the server packs up to ``max_batch`` of them into a wave,
+left-pads to a common length, prefIlls once, then decodes until every slot
+hits EOS or its token budget.  Finished slots are masked out (their tokens
+ignored) so stragglers don't produce garbage.  This is the paper-agnostic
+serving substrate the Gemini-mapped pipeline executor (runtime.pipeline)
+plugs into.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model_api
+from ..nn.params import default_rules
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new: int = 32
+
+
+@dataclass
+class Result:
+    rid: int
+    tokens: np.ndarray
+    latency_s: float
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_seq: int = 512, eos_id: int = 0, rules=None,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.rules = rules or default_rules()
+        self.api = model_api(cfg)
+        self._queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c: self.api.decode_step(p, t, c, self.rules))
+        self._prefill = jax.jit(
+            lambda p, b, c: self.api.prefill(p, b, c, self.rules))
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _pad_wave(self, wave: List[Request]) -> np.ndarray:
+        L = max(len(r.prompt) for r in wave)
+        toks = np.full((len(wave), L), self.eos_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, L - len(r.prompt):] = r.prompt     # left-pad
+        return toks
+
+    def step(self) -> List[Result]:
+        """Serve one wave; returns completed results (possibly empty)."""
+        if not self._queue:
+            return []
+        wave = self._queue[:self.max_batch]
+        self._queue = self._queue[self.max_batch:]
+        t0 = time.time()
+        toks = self._pad_wave(wave)
+        B, L = toks.shape
+        cache, _ = self.api.init_cache(B, self.max_seq,
+                                       min(self.max_seq, 1500))
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend in ("patch", "audio"):
+            batch["embeds"] = jnp.zeros((B, L, self.cfg.d_model),
+                                        jnp.bfloat16)
+        logits, cache = self._prefill(self.params, batch, cache)
+        max_new = max(r.max_new for r in wave)
+        out = np.zeros((B, max_new), np.int32)
+        done = np.zeros((B,), bool)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for t in range(max_new):
+            out[:, t] = np.asarray(cur[:, 0])
+            done |= out[:, t] == self.eos_id
+            done |= np.array([t >= r.max_new for r in wave])
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cur, cache)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        dt = time.time() - t0
+        results = []
+        for i, r in enumerate(wave):
+            seq = out[i, :r.max_new]
+            stop = np.nonzero(seq == self.eos_id)[0]
+            if len(stop):
+                seq = seq[:stop[0] + 1]
+            results.append(Result(rid=r.rid, tokens=seq, latency_s=dt))
+        return results
+
+    def run_until_empty(self) -> List[Result]:
+        results = []
+        while self._queue:
+            results.extend(self.step())
+        return results

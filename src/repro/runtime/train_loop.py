@@ -1,0 +1,156 @@
+"""Fault-tolerant training loop.
+
+Composes: synthetic data pipeline (+prefetch), sharded train step (from
+launch.steps), checkpoint manager (atomic, keep-K, async), straggler
+watchdog (step-time EWMA; slow steps are logged and counted — on real
+multi-host topologies this is where you'd trigger hot-spare swaps), and
+crash recovery: on start the loop restores the latest checkpoint and the
+data pipeline resumes bit-exactly (batches are a pure function of step).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.ckpt import CheckpointManager
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, Prefetcher, make_batch, make_embeds_batch
+from ..launch.steps import (batch_axes, derive_attn_rules, fit_batch_rules)
+from ..models import model_api
+from ..nn.params import default_rules, tree_sharding
+from ..optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    straggler_factor: float = 3.0
+    async_ckpt: bool = True
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+@dataclass
+class StragglerWatchdog:
+    """EWMA step-time monitor (straggler mitigation hook)."""
+    factor: float = 3.0
+    alpha: float = 0.2
+    ewma: Optional[float] = None
+    slow_steps: int = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        if slow:
+            self.slow_steps += 1
+        # don't poison the EWMA with outliers
+        self.ewma = dt if self.ewma is None else (
+            self.ewma if slow else
+            (1 - self.alpha) * self.ewma + self.alpha * dt)
+        return slow
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data: DataConfig, tcfg: TrainConfig,
+                 mesh=None):
+        self.cfg = cfg
+        self.data = data
+        self.tcfg = tcfg
+        if mesh is None:
+            from ..launch.mesh import make_host_mesh
+            n = len(jax.devices())
+            mesh = make_host_mesh((n, 1), ("data", "model"))
+        self.mesh = mesh
+        self.api = model_api(cfg)
+        rules = fit_batch_rules(default_rules(), data.global_batch, mesh)
+        self.rules = derive_attn_rules(cfg, mesh, rules, "train")
+        self.mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep,
+                                     async_write=tcfg.async_ckpt)
+        self.watchdog = StragglerWatchdog(factor=tcfg.straggler_factor)
+        self.metrics_log: list = []
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        from ..launch.steps import get_param_axes
+        cfg, mesh, rules = self.cfg, self.mesh, self.rules
+        p_axes = get_param_axes(cfg)
+        self.p_shardings = tree_sharding(p_axes, rules, mesh)
+        opt_cfg = self.tcfg.opt
+
+        def step_fn(state, batch):
+            params, opt = state["params"], state["opt"]
+            (loss, m), grads = jax.value_and_grad(
+                lambda p, b: self.api.loss_fn(p, b, rules),
+                has_aux=True)(params, batch)
+            new_p, new_opt, om = adamw_update(opt_cfg, params, grads, opt)
+            return ({"params": new_p, "opt": new_opt},
+                    {"loss": m["nll"], **om})
+
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    def init_state(self) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params, _ = self.api.init_params(key)
+        params = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                              params, self.p_shardings)
+        return {"params": params, "opt": init_opt_state(params)}
+
+    def _batch_fn(self, step: int) -> Dict[str, np.ndarray]:
+        if self.cfg.frontend in ("patch", "audio"):
+            return make_embeds_batch(self.data, step, self.cfg.d_model,
+                                     need_tokens=self.cfg.family == "encdec")
+        return make_batch(self.data, step)
+
+    # ------------------------------------------------------------------
+    def run(self, resume: bool = True) -> Dict[str, Any]:
+        state = self.init_state()
+        start = 0
+        if resume:
+            restored, start = self.mgr.restore_latest(
+                jax.tree.map(np.asarray, state))
+            if restored is not None:
+                state = jax.tree.map(
+                    lambda x, ref: jax.device_put(np.asarray(x), ref.sharding),
+                    restored, state)
+                print(f"[trainer] resumed from step {start}")
+        pf = Prefetcher(self._batch_fn, start_step=start, depth=2)
+        losses = []
+        try:
+            for step in range(start, self.tcfg.steps):
+                _, batch = pf.next()
+                t0 = time.time()
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                slow = self.watchdog.observe(dt)
+                losses.append(loss)
+                if slow:
+                    print(f"[watchdog] step {step} took {dt:.2f}s "
+                          f"(ewma {self.watchdog.ewma:.2f}s) — straggler")
+                if step % self.tcfg.log_every == 0:
+                    rec = {"step": step, "loss": loss, "dt": dt,
+                           "grad_norm": float(metrics["grad_norm"]),
+                           "lr": float(metrics["lr"])}
+                    self.metrics_log.append(rec)
+                    print(f"[trainer] {json.dumps(rec)}", flush=True)
+                if (step + 1) % self.tcfg.ckpt_every == 0 \
+                        or step + 1 == self.tcfg.steps:
+                    self.mgr.save(state, step + 1)
+            self.mgr.wait()
+        finally:
+            pf.close()
+        return {"state": state, "losses": losses,
+                "slow_steps": self.watchdog.slow_steps,
+                "final_step": self.tcfg.steps}

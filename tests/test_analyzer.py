@@ -1,0 +1,115 @@
+"""Analyzer conservation/geometry tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.analyzer import Analyzer, d2d_hop_stats, router_grid
+from repro.core.encoding import LMS, MS
+from repro.core.hw import ArchConfig
+from repro.core.workload import Graph, Layer, LayerGroup
+
+
+def _arch(**kw):
+    kw.setdefault("x_cores", 4)
+    kw.setdefault("y_cores", 2)
+    kw.setdefault("xcut", 2)
+    kw.setdefault("ycut", 1)
+    return ArchConfig(**kw)
+
+
+def _two_layer_graph():
+    g = Graph("g")
+    g.add(Layer(name="a", kind="conv", K=8, H=4, W=4, C=3))
+    g.add(Layer(name="b", kind="conv", K=8, H=4, W=4, C=8), ["a"])
+    return g
+
+
+def test_router_grid_d2d_edges():
+    arch = _arch()
+    grid = router_grid(arch)
+    # vertical cut between x=2,3 of cores -> node cols 2|3... plus IO edges
+    assert grid.edge_is_d2d.any()
+    # all edges between IO column (0) and first core column are d2d
+    assert grid.n_edges > 0
+
+
+def test_same_core_no_traffic():
+    """Producer and consumer on the same single core -> zero NoC bytes."""
+    arch = _arch()
+    g = _two_layer_graph()
+    grp = LayerGroup(names=("a", "b"), batch_unit=1)
+    # different cores for a and b is required (disjoint CG) — so instead
+    # check: traffic from a's core to b's core flows on the path between.
+    lms = LMS(ms={
+        "a": MS(part=(1, 1, 1, 1), cg=(0,), fd=(1, 1, -1)),
+        "b": MS(part=(1, 1, 1, 1), cg=(1,), fd=(-1, 1, 1)),
+    })
+    an = Analyzer(arch, g).analyze(grp, lms, total_batch=1)
+    # dependency a->b is K*H*W bytes
+    expected = 8 * 4 * 4
+    assert an.core_out_bytes[0] == expected
+    assert an.core_in_bytes[1] >= expected
+
+
+def test_k_partition_multicast_counts_once():
+    """Consumer K-partitioned: both parts need a's full ofmap -> multicast
+    tree must carry the data once on shared edges."""
+    arch = _arch()
+    g = _two_layer_graph()
+    grp = LayerGroup(names=("a", "b"), batch_unit=1)
+    lms_multi = LMS(ms={
+        "a": MS(part=(1, 1, 1, 1), cg=(0,), fd=(1, 1, -1)),
+        "b": MS(part=(1, 1, 1, 2), cg=(1, 2), fd=(-1, 1, 1)),
+    })
+    an = Analyzer(arch, g).analyze(grp, lms_multi, total_batch=1)
+    # core0 -> core1 -> core2 is one XY path; shared first hop counted once
+    vol = 8 * 4 * 4
+    assert an.core_out_bytes[0] == vol          # multicast: one emission
+    assert an.core_in_bytes[1] == vol
+    assert an.core_in_bytes[2] == vol
+
+
+def test_d2d_bytes_when_crossing_cut():
+    arch = _arch()          # cut between core x=1 and x=2
+    g = _two_layer_graph()
+    grp = LayerGroup(names=("a", "b"), batch_unit=1)
+    # core 0 (x=0) -> core 3 (x=3) crosses the cut
+    lms = LMS(ms={
+        "a": MS(part=(1, 1, 1, 1), cg=(0,), fd=(1, 1, -1)),
+        "b": MS(part=(1, 1, 1, 1), cg=(3,), fd=(-1, 1, 1)),
+    })
+    an = Analyzer(arch, g).analyze(grp, lms, total_batch=1)
+    assert an.d2d_bytes >= 8 * 4 * 4
+
+
+def test_compute_conservation():
+    """Sum of per-core MACs equals the layer total regardless of mapping."""
+    arch = _arch()
+    g = _two_layer_graph()
+    grp = LayerGroup(names=("a", "b"), batch_unit=2)
+    rng = np.random.default_rng(3)
+    from repro.core.encoding import random_lms
+    totals = []
+    for seed in range(5):
+        lms = random_lms(grp, g, arch.n_cores, arch.n_dram,
+                         np.random.default_rng(seed))
+        an = Analyzer(arch, g).analyze(grp, lms, total_batch=2)
+        totals.append(an.core_macs.sum())
+    expected = g.layers["a"].macs(2) + g.layers["b"].macs(2)
+    for t in totals:
+        assert abs(t - expected) / expected < 1e-6
+
+
+def test_interleaved_dram_balances():
+    arch = _arch(n_dram=2)
+    g = Graph("g1")
+    g.add(Layer(name="a", kind="conv", K=16, H=8, W=8, C=3))
+    grp = LayerGroup(names=("a",), batch_unit=1)
+    lms0 = LMS(ms={"a": MS(part=(1, 1, 1, 1), cg=(0,), fd=(1, 1, 1))})
+    lmsI = LMS(ms={"a": MS(part=(1, 1, 1, 1), cg=(0,), fd=(0, 0, 0))})
+    an0 = Analyzer(arch, g).analyze(grp, lms0, total_batch=1)
+    anI = Analyzer(arch, g).analyze(grp, lmsI, total_batch=1)
+    # pinned: all fmap traffic on DRAM 0; interleaved: split evenly
+    assert an0.dram_bytes[1] == 0
+    assert abs(anI.dram_bytes[0] - anI.dram_bytes[1]) < 1e-9
+    assert np.isclose(an0.dram_bytes.sum(), anI.dram_bytes.sum())

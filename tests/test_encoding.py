@@ -1,0 +1,108 @@
+"""Unit tests for the LP-SPM encoding (paper Sec. IV)."""
+
+import numpy as np
+import pytest
+
+from repro.core.encoding import (LMS, MS, Region, factor_parts, ifmap_region,
+                                 parse_regions, random_lms, space_size_lower_bound,
+                                 split_points, tangram_space_upper_bound)
+from repro.core.workload import Graph, Layer, LayerGroup
+
+
+def _mini_graph():
+    g = Graph("mini")
+    g.add(Layer(name="l1", kind="conv", K=4, H=6, W=6, C=3, R=3, S=3))
+    g.add(Layer(name="l2", kind="conv", K=8, H=6, W=6, C=4), ["l1"])
+    return g
+
+
+def test_split_points_cover_exactly():
+    sp = split_points(10, 3)
+    assert sp[0] == 0 and sp[-1] == 10
+    sizes = np.diff(sp)
+    assert sizes.sum() == 10
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_split_points_rejects_oversplit():
+    with pytest.raises(ValueError):
+        split_points(3, 4)
+
+
+def test_ms_validates_product():
+    with pytest.raises(ValueError):
+        MS(part=(2, 1, 1, 1), cg=(0, 1, 2), fd=(-1, 0, -1))
+    with pytest.raises(ValueError):
+        MS(part=(1, 1, 1, 2), cg=(0, 0), fd=(-1, 0, -1))
+
+
+def test_correspondence_rule_row_major():
+    # paper example: NID = h*W*B*K + w*B*K + b*K + k
+    ms = MS(part=(1, 1, 2, 2), cg=(2, 1, 5, 4), fd=(1, 1, -1))
+    assert ms.core_of(0, 0, 0, 0) == 2
+    assert ms.core_of(0, 0, 0, 1) == 1
+    assert ms.core_of(0, 0, 1, 0) == 5
+    assert ms.core_of(0, 0, 1, 1) == 4
+
+
+def test_parse_regions_partition_cube():
+    lyr = Layer(name="x", kind="conv", K=8, H=5, W=7, C=3)
+    ms = MS(part=(2, 2, 1, 2), cg=tuple(range(8)), fd=(0, 0, 0))
+    regs = parse_regions(ms, lyr, batch_unit=1)
+    total = sum(r.elems for r in regs.values())
+    assert total == 8 * 5 * 7 * 1
+    # disjoint
+    for c1 in regs:
+        for c2 in regs:
+            if c1 != c2:
+                assert regs[c1].overlap(regs[c2]) == 0
+
+
+def test_ifmap_region_conv_halo():
+    lyr = Layer(name="x", kind="conv", K=8, H=8, W=8, C=4, R=3, S=3)
+    r = Region(2, 4, 0, 8, 0, 1, 0, 8)
+    ir = ifmap_region(lyr, r, in_K=4)
+    assert ir.h0 <= 2 and ir.h1 >= 4          # halo widens
+    assert ir.k0 == 0 and ir.k1 == 4          # full channel contraction
+
+
+def test_eltwise_ifmap_is_identity():
+    lyr = Layer(name="x", kind="eltwise", K=8, H=8, W=8, n_inputs=2)
+    r = Region(2, 4, 1, 3, 0, 1, 2, 6)
+    assert ifmap_region(lyr, r, in_K=8) == r
+
+
+def test_factor_parts_respects_caps():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        part = factor_parts(12, (4, 6, 2, 8), rng)
+        assert np.prod(part) == 12
+        assert part[0] <= 4 and part[1] <= 6 and part[2] <= 2 and part[3] <= 8
+
+
+def test_random_lms_valid():
+    g = _mini_graph()
+    grp = LayerGroup(names=("l1", "l2"), batch_unit=2)
+    rng = np.random.default_rng(1)
+    for seed in range(10):
+        lms = random_lms(grp, g, n_cores=6, n_dram=2,
+                         rng=np.random.default_rng(seed))
+        lms.validate(grp, g, n_cores=6, n_dram=2)
+
+
+def test_space_size_dwarfs_tangram():
+    ours = space_size_lower_bound(4, 16)
+    theirs = tangram_space_upper_bound(4, 16)
+    assert ours > theirs * 1000
+
+
+def test_fd_structural_rules():
+    g = _mini_graph()
+    grp = LayerGroup(names=("l1", "l2"), batch_unit=1)
+    # weighted layer with WGT=-1 must fail
+    bad = LMS(ms={
+        "l1": MS(part=(1, 1, 1, 1), cg=(0,), fd=(0, -1, -1)),
+        "l2": MS(part=(1, 1, 1, 1), cg=(1,), fd=(-1, 0, 0)),
+    })
+    with pytest.raises(ValueError):
+        bad.validate(grp, g, n_cores=6, n_dram=2)

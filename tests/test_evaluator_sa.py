@@ -1,0 +1,128 @@
+"""Evaluator monotonicity + SA engine behaviour + MC evaluator claims."""
+
+import numpy as np
+import pytest
+
+from repro.core.evaluator import Evaluator
+from repro.core.graph_partition import partition_graph, pick_batch_unit
+from repro.core.hw import ArchConfig, gemini_arch_72t, simba_arch
+from repro.core.mc import evaluate_mc
+from repro.core.sa import SAConfig, sa_optimize
+from repro.core.tangram import tangram_map
+from repro.core.workloads import transformer
+
+
+def _tf_small():
+    return transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+
+
+def test_evaluate_positive_and_decomposed():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    ev = Evaluator(arch, g)
+    r = ev.evaluate(tangram_map(groups, g, arch), 8)
+    assert r.delay_s > 0 and r.energy_j > 0
+    for ge in r.groups:
+        assert ge.energy_j == pytest.approx(sum(ge.energy_breakdown.values()))
+        assert ge.bottleneck in ("compute", "noc", "d2d", "dram")
+
+
+def test_more_noc_bw_not_slower():
+    g = _tf_small()
+    arch_lo = simba_arch().replace(noc_bw=8.0, d2d_bw=4.0)
+    arch_hi = simba_arch().replace(noc_bw=64.0, d2d_bw=32.0)
+    d = {}
+    for name, arch in (("lo", arch_lo), ("hi", arch_hi)):
+        groups = partition_graph(g, arch, 8)
+        ev = Evaluator(arch, g)
+        d[name] = ev.evaluate(tangram_map(groups, g, arch), 8).delay_s
+    assert d["hi"] <= d["lo"] * 1.01
+
+
+def test_batch_scaling_delay():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)   # batch_unit <= 8
+    ev = Evaluator(arch, g)
+    m = tangram_map(groups, g, arch)
+    d8 = ev.evaluate(m, 8).delay_s
+    d512 = ev.evaluate(m, 512).delay_s     # 64x the passes
+    assert d512 > d8 * 3                   # fill/drain damps small ratios
+
+
+def test_sa_improves_over_tmap():
+    arch = simba_arch()
+    g = transformer(n_layers=3, d_model=256, d_ff=512, seq=128, name="tf-m")
+    groups = partition_graph(g, arch, 16)
+    ev = Evaluator(arch, g)
+    init = tangram_map(groups, g, arch)
+    base = ev.evaluate(init, 16)
+    res = sa_optimize(g, arch, groups, 16,
+                      SAConfig(iters=800, seed=0), init=init, evaluator=ev)
+    assert res.cost <= base.cost() * 1.0001
+    # the returned mapping is valid
+    for grp, lms in res.mapping:
+        lms.validate(grp, g, arch.n_cores, arch.n_dram)
+
+
+def test_sa_deterministic_by_seed():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    r1 = sa_optimize(g, arch, groups, 8, SAConfig(iters=200, seed=7))
+    r2 = sa_optimize(g, arch, groups, 8, SAConfig(iters=200, seed=7))
+    assert r1.cost == r2.cost
+
+
+def test_graph_partition_covers_in_order():
+    arch = simba_arch()
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64)
+    groups = partition_graph(g, arch, 16)
+    flat = [n for grp in groups for n in grp.names]
+    assert flat == g.topo_order()
+    for grp in groups:
+        assert 1 <= grp.batch_unit <= 64
+
+
+def test_pick_batch_unit_fits_glb():
+    arch = simba_arch()
+    g = _tf_small()
+    names = list(g.layers)[:4]
+    bu = pick_batch_unit(g, names, arch, 64)
+    glb_total = arch.core_glb_bytes * arch.n_cores
+    weights = sum(g.layers[n].weight_bytes() for n in names)
+    fmaps = sum(g.layers[n].ofmap_bytes(bu) * 2 for n in names)
+    assert bu == 1 or weights + fmaps * 2 <= glb_total
+
+
+# ---------------------------------------------------------------------------
+# Monetary cost (paper Sec. V-C / VII-A)
+# ---------------------------------------------------------------------------
+
+def test_mc_simba_d2d_share():
+    mc = evaluate_mc(simba_arch())
+    assert 0.30 <= mc.d2d_area_fraction <= 0.55      # "nearly 40%" in paper
+
+
+def test_mc_garch_close_to_sarch():
+    s = evaluate_mc(simba_arch()).total
+    gm = evaluate_mc(gemini_arch_72t()).total
+    assert abs(gm - s) / s < 0.35                    # paper: +14.3% (G+DSE)
+
+
+def test_mc_overly_fine_partition_worse():
+    base = ArchConfig(x_cores=6, y_cores=6, xcut=2, ycut=1)
+    fine = ArchConfig(x_cores=6, y_cores=6, xcut=6, ycut=6)
+    assert evaluate_mc(fine).total > evaluate_mc(base).total
+
+
+def test_mc_yield_model():
+    """Bigger dies must cost super-linearly more silicon."""
+    small = ArchConfig(x_cores=4, y_cores=4, xcut=2, ycut=2, glb_kb=1024)
+    big = ArchConfig(x_cores=4, y_cores=4, xcut=1, ycut=1, glb_kb=1024)
+    mcs, mcb = evaluate_mc(small), evaluate_mc(big)
+    # same logic area; the monolithic die pays the yield tax on silicon
+    per_mm2_small = mcs.silicon / mcs.total_silicon_area
+    per_mm2_big = mcb.silicon / mcb.total_silicon_area
+    assert per_mm2_big > per_mm2_small

@@ -1,0 +1,138 @@
+"""Trip-count-aware HLO analysis: exactness on known-FLOPs programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (HloAnalyzer, _type_bytes,
+                                       analyze_hlo_text, top_contributors)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_exact():
+    L, n, B = 8, 128, 4
+    w = jnp.ones((L, n, n), jnp.float32)
+    x = jnp.ones((B, n), jnp.float32)
+
+    def f(w, x):
+        def body(h, wl):
+            return h @ wl, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    costs = analyze_hlo_text(_compile(f, w, x).as_text())
+    assert costs.flops == pytest.approx(2 * B * n * n * L, rel=0.02)
+
+
+def test_nested_scan_flops_exact():
+    L, M, n, B = 4, 3, 64, 2
+    w = jnp.ones((L, n, n), jnp.float32)
+    x = jnp.ones((M, B, n), jnp.float32)
+
+    def f(w, x):
+        def outer(c, xm):
+            def body(h, wl):
+                return h @ wl, None
+            h, _ = jax.lax.scan(body, xm, w)
+            return c + h.sum(), None
+        s, _ = jax.lax.scan(outer, jnp.zeros(()), x)
+        return s
+
+    costs = analyze_hlo_text(_compile(f, w, x).as_text())
+    assert costs.flops == pytest.approx(2 * B * n * n * L * M, rel=0.02)
+
+
+def test_unrolled_equals_scanned():
+    n, B, L = 64, 2, 6
+    w = jnp.ones((L, n, n), jnp.float32)
+    x = jnp.ones((B, n), jnp.float32)
+
+    def scanned(w, x):
+        def body(h, wl):
+            return h @ wl, None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    def unrolled(w, x):
+        h = x
+        for i in range(L):
+            h = h @ w[i]
+        return h.sum()
+
+    cs = analyze_hlo_text(_compile(scanned, w, x).as_text())
+    cu = analyze_hlo_text(_compile(unrolled, w, x).as_text())
+    assert cs.flops == pytest.approx(cu.flops, rel=0.05)
+
+
+def test_dus_cache_update_charged_as_slice():
+    """KV-cache style dus must NOT be charged the whole buffer."""
+    cache = jnp.zeros((64, 1024, 16), jnp.float32)    # 4 MB
+    upd = jnp.ones((64, 1, 16), jnp.float32)          # 4 KB
+
+    def f(cache, upd):
+        def body(c, i):
+            c = jax.lax.dynamic_update_slice(c, upd, (0, i, 0))
+            return c, None
+        c, _ = jax.lax.scan(body, cache, jnp.arange(8))
+        return c.sum()
+
+    costs = analyze_hlo_text(_compile(f, cache, upd).as_text())
+    full = 64 * 1024 * 16 * 4
+    # 8 slice-updates plus one full reduce; far below 8 x full buffer
+    assert costs.bytes < 4 * full
+
+
+def test_collectives_inside_loops_multiply():
+    """psum inside a scan counts once per iteration."""
+    import os
+    # need >= 2 devices for a real collective: emulate via named sharding?
+    # On 1 device XLA folds the psum away, so just assert parsing stability.
+    text = """
+HloModule m
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4]{0} get-tuple-element(%p), index=1
+  %ar = f32[4]{0} all-reduce(%x), to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4]{0}) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4]) -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]{0}) tuple(%z, %x)
+  %w = (s32[], f32[4]{0}) while(%t0), condition=%cond, body=%body
+  ROOT %o = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+    costs = analyze_hlo_text(text)
+    assert costs.coll_bytes == pytest.approx(5 * 16)      # 5 trips x 16B
+    assert costs.coll_by_kind["all-reduce"] == pytest.approx(80)
+
+
+def test_type_bytes_tuple():
+    assert _type_bytes("(f32[2,3]{1,0}, bf16[4]{0})") == 24 + 8
+
+
+def test_top_contributors_runs():
+    n = 64
+    a = jnp.ones((n, n), jnp.float32)
+
+    def f(a):
+        return (a @ a).sum()
+
+    top = top_contributors(_compile(f, a).as_text(), "flops", 5)
+    assert top and top[0][0] >= 2 * n ** 3 * 0.9

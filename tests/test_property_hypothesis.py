@@ -1,0 +1,201 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.encoding import (LMS, MS, factor_parts, parse_regions,
+                                 random_lms, split_points)
+from repro.core.workload import Graph, Layer, LayerGroup
+
+SET = settings(max_examples=40, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# encoding invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(dim=st.integers(1, 512), parts=st.integers(1, 64))
+def test_split_points_properties(dim, parts):
+    if parts > dim:
+        with pytest.raises(ValueError):
+            split_points(dim, parts)
+        return
+    sp = split_points(dim, parts)
+    sizes = np.diff(sp)
+    assert sp[0] == 0 and sp[-1] == dim
+    assert (sizes >= 1).all()
+    assert sizes.max() - sizes.min() <= 1
+
+
+@SET
+@given(n=st.integers(1, 64),
+       dims=st.tuples(st.integers(1, 32), st.integers(1, 32),
+                      st.integers(1, 8), st.integers(1, 64)),
+       seed=st.integers(0, 2**31 - 1))
+def test_factor_parts_product_and_caps(n, dims, seed):
+    rng = np.random.default_rng(seed)
+    try:
+        part = factor_parts(n, dims, rng)
+    except ValueError:
+        # must genuinely be infeasible for any single-dim fallback
+        assert all(d < n for d in dims)
+        return
+    assert int(np.prod(part)) == n
+    for p, d in zip(part, dims):
+        assert 1 <= p <= d
+
+
+@SET
+@given(h=st.integers(1, 16), w=st.integers(1, 16), b=st.integers(1, 4),
+       k=st.integers(1, 16), seed=st.integers(0, 1000))
+def test_regions_partition_exactly(h, w, b, k, seed):
+    """Correspondence Rule regions tile the ofmap cube with no gap/overlap."""
+    lyr = Layer(name="x", kind="conv", K=k * 2, H=h * 2, W=w * 2, C=3)
+    rng = np.random.default_rng(seed)
+    part = factor_parts(min(h * w * b * k, 8),
+                        (lyr.H, lyr.W, b * 2, lyr.K), rng)
+    nc = int(np.prod(part))
+    ms = MS(part=part, cg=tuple(range(nc)), fd=(0, 0, 0))
+    regs = parse_regions(ms, lyr, batch_unit=b * 2)
+    total = sum(r.elems for r in regs.values())
+    assert total == lyr.H * lyr.W * (b * 2) * lyr.K
+    regs_l = list(regs.values())
+    for i in range(len(regs_l)):
+        for j in range(i + 1, len(regs_l)):
+            assert regs_l[i].overlap(regs_l[j]) == 0
+
+
+def _chain_graph(n_layers: int) -> Graph:
+    g = Graph("chain")
+    prev = None
+    for i in range(n_layers):
+        g.add(Layer(name=f"l{i}", kind="conv", K=8, H=8, W=8,
+                    C=8 if prev else 3), [prev] if prev else ())
+        prev = f"l{i}"
+    return g
+
+
+@SET
+@given(n_layers=st.integers(2, 5), n_cores=st.integers(6, 36),
+       seed=st.integers(0, 1000))
+def test_random_lms_always_valid(n_layers, n_cores, seed):
+    g = _chain_graph(n_layers)
+    grp = LayerGroup(names=tuple(g.topo_order()), batch_unit=2)
+    lms = random_lms(grp, g, n_cores, 2, np.random.default_rng(seed))
+    lms.validate(grp, g, n_cores, 2)
+
+
+@SET
+@given(seed=st.integers(0, 500), op_seq=st.lists(st.integers(1, 5),
+                                                 min_size=1, max_size=30))
+def test_sa_operators_preserve_validity(seed, op_seq):
+    """Any operator sequence keeps the LMS valid (paper's closure claim)."""
+    from repro.core.hw import ArchConfig
+    from repro.core.sa import _Op
+    from repro.core.tangram import stripe_lms
+    arch = ArchConfig(x_cores=4, y_cores=3, xcut=2, ycut=1)
+    g = _chain_graph(3)
+    grp = LayerGroup(names=tuple(g.topo_order()), batch_unit=2)
+    lms = stripe_lms(grp, g, arch, arch.n_dram)
+    lms.validate(grp, g, arch.n_cores, arch.n_dram)
+    rng = np.random.default_rng(seed)
+    ops = _Op(g, arch, rng)
+    idle = [c for c in range(arch.n_cores) if c not in lms.cores_used()]
+    for op in op_seq:
+        if op == 1:
+            cand = ops.op1(grp, lms)
+        elif op == 2:
+            cand = ops.op2(grp, lms)
+        elif op == 3:
+            cand = ops.op3(grp, lms)
+        elif op == 4:
+            r = ops.op4(grp, lms, idle)
+            cand = None
+            if r is not None:
+                cand, idle = r
+        else:
+            cand = ops.op5(grp, lms)
+        if cand is not None:
+            cand.validate(grp, g, arch.n_cores, arch.n_dram)
+            lms = cand
+
+
+# ---------------------------------------------------------------------------
+# optimizer / compression invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-4, 1e3))
+def test_int8_error_feedback_bounded(seed, scale):
+    from repro.optim.adamw import compress_int8, decompress_int8
+    rng = np.random.default_rng(seed)
+    g = np.asarray(rng.normal(size=(64,)) * scale, np.float32)
+    q, s = compress_int8(g)
+    deq = decompress_int8(np.asarray(q), np.asarray(s))
+    err = np.abs(np.asarray(deq) - g)
+    assert err.max() <= float(s) * 0.5 + 1e-6      # half-ULP of the quantizer
+
+
+@SET
+@given(seed=st.integers(0, 200))
+def test_error_feedback_unbiased_over_steps(seed):
+    """Accumulated EF-compressed gradients converge to the true sum."""
+    from repro.optim.adamw import ef_compress_tree, init_error_state
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+    err = init_error_state(g)
+    acc = np.zeros(32)
+    for _ in range(16):
+        q, s, err = ef_compress_tree(g, err)
+        acc += np.asarray(q["w"], np.float32) * float(s["w"])
+    true = np.asarray(g["w"]) * 16
+    # relative error shrinks with steps thanks to error feedback
+    assert np.abs(acc - true).max() <= float(s["w"]) * 2
+
+
+# ---------------------------------------------------------------------------
+# data pipeline invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 1000))
+def test_batches_deterministic(step, seed):
+    from repro.data.pipeline import DataConfig, make_batch
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=4, seed=seed)
+    b1 = make_batch(cfg, step)
+    b2 = make_batch(cfg, step)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert (b1["labels"] == b2["labels"]).all()
+    assert b1["tokens"].max() < 1000 and b1["tokens"].min() >= 0
+
+
+@SET
+@given(step=st.integers(0, 100))
+def test_host_shards_disjoint_and_cover(step):
+    from repro.data.pipeline import DataConfig, make_batch
+    full = make_batch(DataConfig(vocab=500, seq_len=16, global_batch=8,
+                                 n_hosts=1, host_id=0), step)
+    parts = [make_batch(DataConfig(vocab=500, seq_len=16, global_batch=8,
+                                   n_hosts=2, host_id=h), step)
+             for h in (0, 1)]
+    stacked = np.concatenate([p["tokens"] for p in parts], axis=0)
+    assert (stacked == full["tokens"]).all()
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       dtype=st.sampled_from(["f32", "bf16", "s8", "pred", "u32"]))
+def test_shape_bytes_parser(dims, dtype):
+    from repro.launch.hlo_analysis import _type_bytes
+    sizes = {"f32": 4, "bf16": 2, "s8": 1, "pred": 1, "u32": 4}
+    typestr = f"{dtype}[{','.join(map(str, dims))}]{{}}"
+    n = int(np.prod(dims)) if dims else 1
+    assert _type_bytes(typestr) == n * sizes[dtype]

@@ -1,0 +1,80 @@
+"""Workload DAG sanity: layer counts, MAC totals vs published numbers,
+DAG validity, LM-graph export."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.workloads import (PAPER_WORKLOADS, inception_resnet_v1,
+                                  pnasnet, resnet50, resnext50, transformer)
+from repro.core.workloads.lm_graph import lm_graph
+
+
+def test_resnet50_macs():
+    g = resnet50()
+    gmacs = g.total_macs(1) / 1e9
+    assert 3.3 < gmacs < 4.5          # published ~3.9-4.1 GMACs @224
+    assert 20e6 < g.total_weight_bytes() < 30e6   # ~25.5M params int8
+
+
+def test_resnext50_macs():
+    g = resnext50()
+    gmacs = g.total_macs(1) / 1e9
+    assert 3.5 < gmacs < 5.0          # published ~4.2 GMACs
+    # grouped convs: fewer MACs than an ungrouped twin would have
+    assert g.total_weight_bytes() < 30e6
+
+
+def test_inception_resnet_structure():
+    g = inception_resnet_v1()
+    assert len(g.layers) > 120        # complex dependencies
+    # residual adds exist with 2 inputs
+    adds = [l for l in g.layers.values() if l.kind == "eltwise"]
+    assert len(adds) >= 20
+    g.validate()
+
+
+def test_pnasnet_structure():
+    g = pnasnet()
+    # five-branch cells -> join conv with 5 producers
+    joins = [n for n in g.layers if n.endswith("_join")]
+    assert joins
+    assert any(len(g.preds(j)) == 5 for j in joins)
+    g.validate()
+
+
+def test_transformer_attention_macs_scale_quadratically():
+    g1 = transformer(n_layers=1, d_model=256, d_ff=512, seq=128, name="a")
+    g2 = transformer(n_layers=1, d_model=256, d_ff=512, seq=256, name="b")
+    qk1 = g1.layers["l0_qk"].macs(1)
+    qk2 = g2.layers["l0_qk"].macs(1)
+    assert qk2 == 4 * qk1
+
+
+def test_all_paper_workloads_validate():
+    for name, fn in PAPER_WORKLOADS.items():
+        g = fn()
+        g.validate()
+        assert g.total_macs(1) > 1e9, name
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-370m", "zamba2-1.2b",
+                                  "granite-moe-3b-a800m"])
+def test_lm_graph_exports(arch):
+    cfg = get_config(arch)
+    g = lm_graph(cfg, seq=512, n_layers=4)
+    g.validate()
+    assert g.total_macs(1) > 0
+    if cfg.family in ("ssm", "hybrid"):
+        assert any("_ssd" in n for n in g.layers)
+    if cfg.family == "hybrid":
+        assert any("_qk" in n for n in g.layers)   # shared attn exported
+
+
+def test_lm_graph_macs_close_to_analytic():
+    """fc-layer MACs of the exported graph ~ 2*N*D forward estimate."""
+    cfg = get_config("qwen3-0.6b")
+    seq = 512
+    g = lm_graph(cfg, seq=seq)
+    macs = g.total_macs(1)
+    approx = cfg.param_count() * seq        # 1 MAC per weight per token
+    assert 0.5 * approx < macs < 2.5 * approx
