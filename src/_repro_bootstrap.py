@@ -1,0 +1,102 @@
+"""Import hooks bridging the pinned toolchain (see ``repro.compat``).
+
+Installed two ways:
+  * ``src/sitecustomize.py`` — auto-imported at interpreter startup for any
+    process with ``PYTHONPATH=src`` (the tier-1 command and the subprocesses
+    the tests spawn);
+  * ``conftest.py`` — imports this module by its unique name, so a bare
+    ``pytest`` works even in environments whose Python ships its own
+    ``sitecustomize`` (where the name-based import would hit the cached
+    system module and silently no-op).
+
+Hooks:
+  * lazy ``jax.shard_map`` alias for jax 0.4.x (disable with
+    ``REPRO_NO_JAX_COMPAT=1``);
+  * a FALLBACK finder serving vendored stand-ins for missing optional
+    dependencies (``hypothesis`` -> ``repro/_vendor/minihypothesis.py``).
+    Appended to ``sys.meta_path``, so an installed real package always
+    wins.  Not affected by ``REPRO_NO_JAX_COMPAT``.
+"""
+
+from __future__ import annotations
+
+import importlib
+import importlib.abc
+import importlib.util
+import os
+import sys
+
+
+class _PatchingLoader(importlib.abc.Loader):
+    def __init__(self, wrapped):
+        self._wrapped = wrapped
+
+    def create_module(self, spec):
+        return self._wrapped.create_module(spec)
+
+    def exec_module(self, module):
+        self._wrapped.exec_module(module)
+        try:
+            from repro.compat import install_jax_compat
+            install_jax_compat(module)
+        except Exception:
+            pass  # never break `import jax` over a missing/broken shim
+
+    def __getattr__(self, name):
+        return getattr(self._wrapped, name)
+
+
+class _JaxCompatFinder(importlib.abc.MetaPathFinder):
+    _busy = False
+
+    def find_spec(self, fullname, path=None, target=None):
+        if fullname != "jax" or _JaxCompatFinder._busy:
+            return None
+        _JaxCompatFinder._busy = True
+        try:
+            spec = importlib.util.find_spec(fullname)
+        finally:
+            _JaxCompatFinder._busy = False
+        if spec is None or spec.loader is None:
+            return None
+        sys.meta_path.remove(self)
+        spec.loader = _PatchingLoader(spec.loader)
+        return spec
+
+
+class _VendoredFallbackFinder(importlib.abc.MetaPathFinder):
+    """Serve vendored stand-ins for missing optional deps.
+
+    Appended to ``sys.meta_path``, so it is consulted only after the normal
+    machinery fails — an installed real package always wins.
+    """
+
+    _vendored = {"hypothesis": "minihypothesis.py"}
+
+    def find_spec(self, fullname, path=None, target=None):
+        fname = self._vendored.get(fullname)
+        if fname is None:
+            return None
+        shim = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "repro", "_vendor", fname)
+        if not os.path.exists(shim):
+            return None
+        return importlib.util.spec_from_file_location(fullname, shim)
+
+
+def install() -> None:
+    """Idempotently register both hooks (jax hook honors the env gate)."""
+    if not any(isinstance(f, _VendoredFallbackFinder) for f in sys.meta_path):
+        sys.meta_path.append(_VendoredFallbackFinder())
+    if os.environ.get("REPRO_NO_JAX_COMPAT"):
+        return
+    if any(isinstance(f, _JaxCompatFinder) for f in sys.meta_path):
+        return
+    if "jax" in sys.modules:  # someone imported jax before us (unlikely)
+        try:
+            from repro.compat import install_jax_compat
+            install_jax_compat(sys.modules["jax"])
+        except Exception:
+            pass
+    else:
+        sys.meta_path.insert(0, _JaxCompatFinder())

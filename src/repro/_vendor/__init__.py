@@ -1,0 +1,5 @@
+"""Vendored pure-Python stand-ins for optional third-party packages.
+
+Served by the fallback import finder in ``src/sitecustomize.py`` only when
+the real package is not installed (see ``minihypothesis.py``).
+"""

@@ -1,0 +1,255 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API we use.
+
+The container image cannot install packages, but the property-test suite
+must collect and run.  This module implements the subset of hypothesis
+used by ``tests/test_property_hypothesis.py`` — ``given``, ``settings``,
+``HealthCheck`` and the ``integers`` / ``floats`` / ``tuples`` / ``lists``
+/ ``sampled_from`` strategies — as a real property-test runner: every test
+executes ``max_examples`` times against deterministic pseudo-random draws
+(seeded per test so failures reproduce), with the first two examples
+pinned to the all-minimal and all-maximal corners of the strategy space.
+
+It is only served when the real package is missing:
+``src/sitecustomize.py`` registers a fallback import finder that maps
+``import hypothesis`` to this file *after* the normal import machinery
+fails to find an installed hypothesis.  ``requirements.txt`` still
+declares the real dependency; environments that install it never see this
+shim.  No shrinking, no database, no health checks — a falsifying example
+is reported as-is.
+"""
+
+from __future__ import annotations
+
+import enum
+import zlib
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+__version__ = "0.mini"
+
+
+class HealthCheck(enum.Enum):
+    data_too_large = 1
+    filter_too_much = 2
+    too_slow = 3
+    return_value = 5
+    large_base_example = 7
+    not_a_test_method = 8
+
+    @classmethod
+    def all(cls) -> List["HealthCheck"]:
+        return list(cls)
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+class _HypothesisHandle:
+    """What pytest's hypothesis integration expects at ``test.hypothesis``."""
+
+    def __init__(self, inner_test: Callable):
+        self.inner_test = inner_test
+
+
+def assume(condition: Any) -> bool:
+    """Abort the current example (not the test) when ``condition`` is falsy."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+class _Rng:
+    """Tiny deterministic PRNG (xorshift64*); avoids importing numpy here."""
+
+    def __init__(self, seed: int):
+        self._s = (seed or 1) & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        x = self._s
+        x ^= (x >> 12) & 0xFFFFFFFFFFFFFFFF
+        x = (x ^ (x << 25)) & 0xFFFFFFFFFFFFFFFF
+        x ^= x >> 27
+        self._s = x
+        return (x * 0x2545F4914F6CDD1D) & 0xFFFFFFFFFFFFFFFF
+
+    def randint(self, lo: int, hi: int) -> int:
+        if hi <= lo:
+            return lo
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (self.next_u64() / 2.0 ** 64) * (hi - lo)
+
+
+class SearchStrategy:
+    def draw(self, rng: _Rng) -> Any:
+        raise NotImplementedError
+
+    def minimal(self) -> Any:
+        raise NotImplementedError
+
+    def maximal(self) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def draw(self, rng: _Rng) -> int:
+        return rng.randint(self.min_value, self.max_value)
+
+    def minimal(self) -> int:
+        return self.min_value
+
+    def maximal(self) -> int:
+        return self.max_value
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.min_value, self.max_value = float(min_value), float(max_value)
+
+    def draw(self, rng: _Rng) -> float:
+        return rng.uniform(self.min_value, self.max_value)
+
+    def minimal(self) -> float:
+        return self.min_value
+
+    def maximal(self) -> float:
+        return self.max_value
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, elems: Tuple[SearchStrategy, ...]):
+        self.elems = elems
+
+    def draw(self, rng: _Rng) -> Tuple:
+        return tuple(s.draw(rng) for s in self.elems)
+
+    def minimal(self) -> Tuple:
+        return tuple(s.minimal() for s in self.elems)
+
+    def maximal(self) -> Tuple:
+        return tuple(s.maximal() for s in self.elems)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem: SearchStrategy, min_size: int, max_size: int):
+        self.elem = elem
+        self.min_size, self.max_size = min_size, max_size
+
+    def draw(self, rng: _Rng) -> List:
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.draw(rng) for _ in range(n)]
+
+    def minimal(self) -> List:
+        return [self.elem.minimal() for _ in range(self.min_size)]
+
+    def maximal(self) -> List:
+        return [self.elem.maximal() for _ in range(self.max_size)]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def draw(self, rng: _Rng):
+        return self.elements[rng.randint(0, len(self.elements) - 1)]
+
+    def minimal(self):
+        return self.elements[0]
+
+    def maximal(self):
+        return self.elements[-1]
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.`` in tests)."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1) -> _Integers:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Floats:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def tuples(*elems: SearchStrategy) -> _Tuples:
+        return _Tuples(elems)
+
+    @staticmethod
+    def lists(elem: SearchStrategy, min_size: int = 0,
+              max_size: int = 10) -> _Lists:
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(elements: Sequence) -> _SampledFrom:
+        return _SampledFrom(elements)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+class settings:
+    """Usable both as ``settings(...)`` decorator and global default."""
+
+    def __init__(self, max_examples: int = 100, deadline: Optional[Any] = None,
+                 suppress_health_check: Sequence[HealthCheck] = (),
+                 **_ignored: Any):
+        self.max_examples = max_examples
+        self.deadline = deadline
+        self.suppress_health_check = list(suppress_health_check)
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._mh_settings = self  # read by the given() wrapper at call time
+        return fn
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    if arg_strategies:
+        raise TypeError("mini-hypothesis supports keyword strategies only")
+
+    def decorate(fn: Callable) -> Callable:
+        def wrapper(*outer_args, **outer_kwargs):
+            cfg: settings = getattr(wrapper, "_mh_settings", None) or settings()
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = _Rng(seed)
+            names = sorted(kw_strategies)
+            for ex in range(max(1, cfg.max_examples)):
+                if ex == 0:
+                    drawn = {n: kw_strategies[n].minimal() for n in names}
+                elif ex == 1:
+                    drawn = {n: kw_strategies[n].maximal() for n in names}
+                else:
+                    drawn = {n: kw_strategies[n].draw(rng) for n in names}
+                try:
+                    fn(*outer_args, **dict(outer_kwargs, **drawn))
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example ({ex + 1}/{cfg.max_examples}): "
+                        f"{fn.__qualname__}({drawn!r})") from err
+            return None
+
+        # pytest must not see the strategy parameters as fixtures, so no
+        # functools.wraps (it sets __wrapped__, which exposes the original
+        # signature); copy identity attributes by hand instead
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis = _HypothesisHandle(fn)
+        return wrapper
+
+    return decorate

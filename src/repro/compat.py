@@ -1,0 +1,53 @@
+"""Version bridges for the pinned toolchain.
+
+The repo is developed against the newer jax surface (top-level
+``jax.shard_map`` taking ``check_vma=``) but must run on the baked-in
+jax 0.4.x, which only ships ``jax.experimental.shard_map.shard_map``
+taking ``check_rep=``.  ``shard_map`` below accepts either spelling and
+dispatches to whatever the installed jax provides;
+``install_jax_compat`` aliases it onto the ``jax`` module so third-party
+code (and test subprocesses) doing ``from jax import shard_map`` keeps
+working.  ``src/sitecustomize.py`` calls the installer lazily the first
+time jax is imported in any process launched with ``PYTHONPATH=src``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+
+def _resolve_native() -> Tuple[Callable, bool]:
+    """Return (native shard_map, is_new_api)."""
+    import jax
+
+    native = jax.__dict__.get("shard_map")
+    if native is not None and native is not shard_map:
+        return native, True
+    from jax.experimental.shard_map import shard_map as native  # type: ignore
+
+    return native, False
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None,
+              **kwargs: Any) -> Callable:
+    """``jax.shard_map`` that accepts both ``check_vma`` and ``check_rep``."""
+    native, is_new = _resolve_native()
+    flag = check_vma if check_vma is not None else check_rep
+    if is_new:
+        if flag is not None:
+            kwargs["check_vma"] = flag
+    else:
+        if flag is not None:
+            kwargs["check_rep"] = flag
+    return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)
+
+
+def install_jax_compat(jax_module: Any = None) -> None:
+    """Alias :func:`shard_map` onto the ``jax`` module when it lacks one."""
+    if jax_module is None:
+        import jax as jax_module  # type: ignore
+    if getattr(jax_module, "shard_map", None) is None:
+        jax_module.shard_map = shard_map

@@ -13,18 +13,28 @@ This is the paper's "LP SPM Analyzer" box (Fig. 4).  Given a layer group, an
 Everything is vectorized with numpy; the router paths for all node pairs are
 precomputed per ``ArchConfig`` and cached, because the SA engine calls this
 millions of times.
+
+Incremental evaluation: the analysis decomposes into per-layer contributions
+(MACs, GLB footprint, weight/ifmap/ofmap DRAM flows) and per-dependency-edge
+contributions (producer->consumer NoC flows), each a pure function of the
+involved layers' frozen ``MS`` entries.  Both are recorded as scatter-add
+streams and memoized, so when an SA operator touches one layer only that
+layer's contribution and its incident edges are recomputed — every other
+stream replays from cache.  Replaying a stream with ``np.add.at`` (unbuffered,
+applied in index order) reproduces the exact float-add sequence of a direct
+computation, keeping cached and uncached results bit-identical.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .encoding import LMS, MS, Region, ifmap_region, parse_regions
+from .encoding import LMS, MS, Region, parse_regions_arrays
 from .hw import ArchConfig
+from .intra_core import explore_intra_core_many
 from .workload import Graph, Layer, LayerGroup
 
 
@@ -123,6 +133,11 @@ class GroupAnalysis:
     weight_dram_bytes_total: float   # unamortized (for energy, counted once)
     # per-layer part tables for the intra-core engine
     layer_parts: Dict[str, Dict[int, Region]] = field(default_factory=dict)
+    # filled by the incremental analyzer (None from the seed-reference path):
+    # per-core intra-core compute seconds and the (GLB read, GLB write)
+    # byte totals of the group's chosen core dataflows
+    core_time_s: Optional[np.ndarray] = None    # (n_cores,)
+    glb_rw_bytes: Optional[np.ndarray] = None   # (2,) read, write
 
     @property
     def total_hops_bytes(self) -> float:
@@ -144,17 +159,100 @@ def _regions_to_array(regions: Dict[int, Region]) -> Tuple[np.ndarray, np.ndarra
 
 def _overlap_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """(P,8) x (Q,8) region arrays -> (P,Q) overlap element counts."""
-    def axis(i):
-        lo = np.maximum(a[:, None, 2 * i], b[None, :, 2 * i])
-        hi = np.minimum(a[:, None, 2 * i + 1], b[None, :, 2 * i + 1])
-        return np.clip(hi - lo, 0, None)
-    return axis(0) * axis(1) * axis(2) * axis(3)
+    lo = np.maximum(a[:, None, 0::2], b[None, :, 0::2])
+    hi = np.minimum(a[:, None, 1::2], b[None, :, 1::2])
+    d = hi - lo
+    np.clip(d, 0, None, out=d)
+    return d[..., 0] * d[..., 1] * d[..., 2] * d[..., 3]
+
+
+# ---------------------------------------------------------------------------
+# Recorded scatter-add contributions
+# ---------------------------------------------------------------------------
+
+# accumulation targets a contribution may write (int-indexed: stream
+# dispatch happens hundreds of thousands of times per SA run).  CORE_TIME
+# and GLB_RW carry the intra-core engine's per-core compute seconds and
+# the (read, write) GLB byte totals, so one cached stream replay yields
+# the full GroupEval input.
+(T_CORE_MACS, T_EDGE, T_EDGE_AM, T_DRAM, T_DRAM_AM,
+ T_GLB, T_CORE_IN, T_CORE_OUT, T_CORE_TIME, T_GLB_RW) = range(10)
+_N_TARGETS = 10
+
+
+class Contribution:
+    """A recorded sequence of scatter-adds onto the analysis accumulators.
+
+    ``add`` records (target, indices, values) in call order; ``seal``
+    shifts the indices by the per-target offsets into the analyzer's one
+    flat accumulator buffer and concatenates everything into a single
+    (idx, vals) stream.  Replaying with ``np.add.at`` — unbuffered,
+    repeated indices applied in order — reproduces the exact float-add
+    sequence of the recording computation: targets never share a buffer
+    cell, and per-cell add order is the add-call order either way.
+    """
+
+    __slots__ = ("_parts", "flat_idx", "flat_vals", "weight_total")
+
+    _EMPTY_I = np.empty(0, dtype=np.int64)
+    _EMPTY_V = np.empty(0, dtype=np.float64)
+
+    def __init__(self) -> None:
+        self._parts: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        self.flat_idx: np.ndarray = self._EMPTY_I
+        self.flat_vals: np.ndarray = self._EMPTY_V
+        self.weight_total = 0.0
+
+    def add(self, target: int, idx, vals) -> None:
+        idx = np.asarray(idx, dtype=np.int64)
+        if idx.ndim != 1:
+            idx = idx.reshape(-1)
+        if idx.size == 0:
+            return
+        vals = np.asarray(vals, dtype=np.float64)
+        if vals.ndim == 0:
+            vals = np.broadcast_to(vals, idx.shape)
+        elif vals.ndim != 1:
+            vals = vals.reshape(-1)
+        self._parts.append((target, idx, vals))
+
+    def seal(self, offsets: Sequence[int]) -> "Contribution":
+        if self._parts:
+            idxs = [i if offsets[t] == 0 else i + offsets[t]
+                    for t, i, _ in self._parts]
+            self.flat_idx = idxs[0] if len(idxs) == 1 else np.concatenate(idxs)
+            self.flat_vals = self._parts[0][2] if len(self._parts) == 1 \
+                else np.concatenate([v for _, _, v in self._parts])
+        self._parts = []
+        return self
+
+    def collect(self, out_i: List[np.ndarray],
+                out_v: List[np.ndarray]) -> None:
+        """Append this contribution's flat stream to the gather lists; the
+        caller concatenates once and replays with one ``np.add.at``."""
+        if self.flat_idx.size:
+            out_i.append(self.flat_idx)
+            out_v.append(self.flat_vals)
+
+
+class _LRU(dict):
+    """Tiny FIFO-evicting dict: good enough for memoizing contributions."""
+
+    def __init__(self, maxsize: int):
+        super().__init__()
+        self.maxsize = maxsize
+
+    def put(self, key, value):
+        if len(self) >= self.maxsize:
+            self.pop(next(iter(self)))
+        self[key] = value
+        return value
 
 
 class Analyzer:
     """Stateful per-(arch, graph) analyzer; reused across SA iterations."""
 
-    def __init__(self, arch: ArchConfig, g: Graph):
+    def __init__(self, arch: ArchConfig, g: Graph, cache_size: int = 50_000):
         self.arch = arch
         self.g = g
         self.grid = router_grid(arch)
@@ -162,11 +260,47 @@ class Analyzer:
             [arch.core_node(c) for c in range(arch.n_cores)], dtype=np.int64)
         self._dram_nodes = np.array(
             [arch.dram_node(d) for d in range(1, arch.n_dram + 1)], dtype=np.int64)
+        # (src, dst) -> boolean edge membership of the XY path; turns the
+        # per-multicast path-union into a gather + OR-reduce.  Dense, so
+        # gate on size (a 12x12 grid is ~12 MB; fall back to sorting above)
+        grid = self.grid
+        if grid.n_nodes * grid.n_nodes * grid.n_edges <= 64_000_000:
+            pm = np.zeros((grid.n_nodes, grid.n_nodes, grid.n_edges),
+                          dtype=bool)
+            ii, jj, kk = np.nonzero(grid.paths >= 0)
+            pm[ii, jj, grid.paths[ii, jj, kk]] = True
+            self._path_mask: Optional[np.ndarray] = pm
+        else:
+            self._path_mask = None
+        # intern small ints for layers/groups: cache keys hash ints, not
+        # string tuples
+        self._layer_idx = {name: i for i, name in enumerate(g.layers)}
+        self._group_ids: Dict[Tuple[str, ...], int] = {}
+        # one flat accumulator buffer; analyze() zero-fills and slices it,
+        # in T_* target order
+        nc, ne, nd = arch.n_cores, self.grid.n_edges, arch.n_dram
+        bounds = np.cumsum([0, nc, ne, ne, nd, nd, nc, nc, nc, nc, 2])
+        self._layout = [(int(bounds[i]), int(bounds[i + 1]))
+                        for i in range(_N_TARGETS)]
+        self._offsets = [lo for lo, _ in self._layout]
+        self._buf_len = int(bounds[-1])
+        # memo tables for the incremental path
+        self._table_cache = _LRU(cache_size)      # region geometry (per Part)
+        self._regions_cache = _LRU(cache_size)
+        self._rarr_cache = _LRU(cache_size)       # regions as (cores, array)
+        self._node_cache = _LRU(cache_size)       # region cores -> grid nodes
+        self._needgeo_cache = _LRU(cache_size)    # need rows (per Part)
+        self._ov_cache = _LRU(cache_size)         # overlap counts (per Part)
+        self._intra_cache = _LRU(cache_size)      # intra-core t/rd/wr (per Part)
+        self._need_cache = _LRU(cache_size)       # consumer need regions
+        self._layer_cache = _LRU(cache_size)      # (pre, post) contributions
+        self._dep_cache = _LRU(cache_size)
+        self._topo_cache = _LRU(cache_size)       # per-group internal preds
 
     # -- routing helpers -----------------------------------------------------
-    def _route(self, edge_bytes: np.ndarray, src_nodes: np.ndarray,
+    def _route(self, contrib: Contribution, target: int, src_nodes: np.ndarray,
                dst_nodes: np.ndarray, vols: np.ndarray) -> None:
-        """Accumulate unicast volumes onto edge loads (vectorized)."""
+        """Record unicast volumes onto edge loads (vectorized)."""
         mask = vols > 0
         if not mask.any():
             return
@@ -174,95 +308,316 @@ class Analyzer:
         paths = self.grid.paths[s, d]            # (n, max_len)
         flat = paths.reshape(-1)
         keep = flat >= 0
-        np.add.at(edge_bytes, flat[keep],
-                  np.repeat(v, paths.shape[1])[keep])
+        contrib.add(target, flat[keep], np.repeat(v, paths.shape[1])[keep])
 
-    def _route_multicast(self, edge_bytes: np.ndarray, src_node: int,
-                         dst_nodes: Sequence[int], vol: float) -> None:
+    def _route_multicast(self, contrib: Contribution, target: int,
+                         src_node: int, dst_nodes: Sequence[int],
+                         vol: float) -> None:
         """One producer datum to many consumers: union of XY paths, counted once."""
         if vol <= 0 or not len(dst_nodes):
             return
         paths = self.grid.paths[src_node, np.asarray(dst_nodes, dtype=np.int64)]
         edges = np.unique(paths[paths >= 0])
-        edge_bytes[edges] += vol
+        contrib.add(target, edges, vol)
+
+    # -- cached pieces ---------------------------------------------------------
+    # Region GEOMETRY (the rows of the Correspondence-Rule table, the needed
+    # ifmap regions, the producerxconsumer overlap counts) depends only on a
+    # layer's Part, never on its CG — core swaps (SA OP2/OP3) reuse it all.
+    # Only the core BINDING (which core holds which row) involves the CG.
+
+    def region_geometry(self, name: str, part: Tuple[int, ...],
+                        bu: int) -> np.ndarray:
+        """Region rows (N, 8) in correspondence order; row i -> CG[i]."""
+        key = (self._layer_idx[name], part, bu)
+        hit = self._table_cache.get(key)
+        if hit is None:
+            ms = MS(part=part, cg=tuple(range(int(np.prod(part)))),
+                    fd=(-1, -1, -1))
+            _, rarr = parse_regions_arrays(ms, self.g.layers[name], bu)
+            hit = self._table_cache.put(key, rarr)
+        return hit
+
+    def region_table(self, name: str, ms: MS, bu: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(cores, region rows) in correspondence order (unsorted)."""
+        return (np.asarray(ms.cg, dtype=np.int64),
+                self.region_geometry(name, ms.part, bu))
+
+    def regions(self, name: str, ms: MS, bu: int) -> Dict[int, Region]:
+        key = (self._layer_idx[name], ms.geo, bu)
+        hit = self._regions_cache.get(key)
+        if hit is None:
+            cores, rarr = self.region_table(name, ms, bu)
+            hit = self._regions_cache.put(
+                key, {c: Region(*row)
+                      for c, row in zip(cores.tolist(), rarr.tolist())})
+        return hit
+
+    def _region_arrays(self, name: str, ms: MS, bu: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(cores sorted, region rows sorted by core, correspondence->sorted
+        permutation)."""
+        key = (self._layer_idx[name], ms.geo, bu)
+        hit = self._rarr_cache.get(key)
+        if hit is None:
+            cores, rarr = self.region_table(name, ms, bu)
+            order = np.argsort(cores)
+            hit = self._rarr_cache.put(key,
+                                       (cores[order], rarr[order], order))
+        return hit
+
+    def _region_nodes(self, name: str, ms: MS, bu: int) -> np.ndarray:
+        key = (self._layer_idx[name], ms.geo, bu)
+        hit = self._node_cache.get(key)
+        if hit is None:
+            cores, _, _ = self._region_arrays(name, ms, bu)
+            hit = self._node_cache.put(key, self._core_nodes[cores])
+        return hit
+
+    def _need_geometry(self, cname: str, c_part: Tuple[int, ...], bu: int,
+                       prod_K: int) -> np.ndarray:
+        """Needed producer-ofmap regions (correspondence order)."""
+        key = (self._layer_idx[cname], c_part, bu, prod_K)
+        hit = self._needgeo_cache.get(key)
+        if hit is None:
+            hit = self._needgeo_cache.put(
+                key, self._ifmap_regions(self.g.layers[cname],
+                                         self.region_geometry(cname, c_part,
+                                                              bu), prod_K))
+        return hit
+
+    def _intra_geometry(self, name: str, part: Tuple[int, ...], bu: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-region (compute seconds, GLB read bytes, GLB write bytes) of
+        the chosen intra-core dataflows, in correspondence order.  Geometry
+        only: row i belongs to whatever core CG[i] names."""
+        key = (self._layer_idx[name], part, bu)
+        hit = self._intra_cache.get(key)
+        if hit is None:
+            arch, lyr = self.arch, self.g.layers[name]
+            rarr = self.region_geometry(name, part, bu)
+            spans = rarr[:, 1::2] - rarr[:, 0::2]       # (N, 4): h, w, b, k
+            elems = spans[:, 0] * spans[:, 1] * spans[:, 2] * spans[:, 3]
+            rk = spans[:, 3]
+            hwb = np.maximum(1, elems // np.maximum(1, rk))
+            bpe = lyr.bytes_per_elem
+            sigs = [(int(rk[i]), lyr.C, int(hwb[i]), lyr.R, lyr.S, bpe,
+                     arch.core_glb_bytes, arch.macs_per_core, lyr.kind)
+                    for i in range(len(rarr))]
+            dfs = explore_intra_core_many(sigs)
+            n = len(dfs)
+            util = np.fromiter((df.utilization for df in dfs), np.float64, n)
+            rd = np.fromiter((df.glb_read_bytes for df in dfs), np.float64, n)
+            wr = np.fromiter((df.glb_write_bytes for df in dfs), np.float64, n)
+            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
+            peak = arch.macs_per_core * arch.freq_ghz * 1e9
+            t = (elems * mac_per_elem) / (peak * np.maximum(util, 1e-3))
+            hit = self._intra_cache.put(key, (t, rd, wr))
+        return hit
+
+    def _overlap_geometry(self, pname: str, p_part: Tuple[int, ...],
+                          cname: str, c_part: Tuple[int, ...], bu: int,
+                          prod_K: int) -> Tuple[np.ndarray, bool]:
+        """(overlap counts in correspondence order, any-nonzero flag)."""
+        key = (self._layer_idx[pname], p_part,
+               self._layer_idx[cname], c_part, bu, prod_K)
+        hit = self._ov_cache.get(key)
+        if hit is None:
+            ov = _overlap_matrix(self.region_geometry(pname, p_part, bu),
+                                 self._need_geometry(cname, c_part, bu,
+                                                     prod_K))
+            hit = self._ov_cache.put(key, (ov, bool(ov.any())))
+        return hit
+
+    @staticmethod
+    def _ifmap_regions(cons: Layer, c_arr: np.ndarray,
+                       prod_K: int) -> np.ndarray:
+        """Vectorized :func:`repro.core.encoding.ifmap_region` over the rows
+        of a consumer region table — same integer arithmetic per kind."""
+        need = c_arr.copy()
+        if cons.kind in ("eltwise",):
+            return need
+        s = cons.stride
+        if cons.kind in ("pool", "depthwise"):
+            need[:, 0] = c_arr[:, 0] * s
+            need[:, 1] = np.minimum(c_arr[:, 1] * s + cons.R - 1, cons.H * s)
+            need[:, 2] = c_arr[:, 2] * s
+            need[:, 3] = np.minimum(c_arr[:, 3] * s + cons.S - 1, cons.W * s)
+            return need
+        # conv / fc / matmul: full channel contraction
+        h_in = cons.H * s
+        w_in = cons.W * s
+        need[:, 0] = np.minimum(c_arr[:, 0] * s, h_in - 1)
+        need[:, 1] = np.minimum(c_arr[:, 1] * s + cons.R - 1, h_in)
+        need[:, 2] = np.minimum(c_arr[:, 2] * s, w_in - 1)
+        need[:, 3] = np.minimum(c_arr[:, 3] * s + cons.S - 1, w_in)
+        need[:, 6] = 0
+        need[:, 7] = prod_K
+        return need
+
+    def _need_arrays(self, cname: str, cms: MS, bu: int, prod_K: int
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Needed producer-ofmap region per consumer part (sorted-core order),
+        plus the multicast grouping: consumer parts with identical need rows
+        (K-partition siblings) as a padded member matrix.
+
+        Returns (need (Q,8), first (G,) first member of each sibling group in
+        first-seen order, members (G,Qmax) member indices padded with -1)."""
+        key = (self._layer_idx[cname], cms.geo, bu, prod_K)
+        hit = self._need_cache.get(key)
+        if hit is None:
+            c_cores, _, c_ord = self._region_arrays(cname, cms, bu)
+            need = self._need_geometry(cname, cms.part, bu, prod_K)[c_ord]
+            groups: Dict[Tuple, List[int]] = {}
+            for qi, row in enumerate(need.tolist()):
+                groups.setdefault(tuple(row), []).append(qi)
+            first = np.array([qis[0] for qis in groups.values()],
+                             dtype=np.int64)
+            qmax = max((len(q) for q in groups.values()), default=0)
+            members = np.full((len(groups), qmax), -1, dtype=np.int64)
+            for gi, qis in enumerate(groups.values()):
+                members[gi, :len(qis)] = qis
+            pad = members < 0
+            c_nodes = self._region_nodes(cname, cms, bu)
+            cn = np.where(pad, -1, c_nodes[members])
+            hit = self._need_cache.put(key, (need, first, members, cn, ~pad))
+        return hit
+
+    def _layer_contribs(self, name: str, ms: MS, bu: int, n_passes: int,
+                        group: LayerGroup,
+                        gid: int) -> Tuple[Contribution, Contribution]:
+        """(pre, post) contributions of one layer: pre = MACs + GLB footprint +
+        weight loads; post = external-ifmap and ofmap DRAM flows.  The split
+        preserves the accumulation order of the monolithic loop, where
+        dependency traffic sits between the two."""
+        key = (self._layer_idx[name], ms, bu, n_passes, gid)
+        hit = self._layer_cache.get(key)
+        if hit is not None:
+            return hit
+        g, in_group = self.g, set(group.names)
+        lyr = g.layers[name]
+        cores, rarr, _ = self._region_arrays(name, ms, bu)
+        nodes = self._core_nodes[cores]
+        bpe = lyr.bytes_per_elem
+
+        pre = Contribution()
+        post = Contribution()
+
+        # compute: MACs proportional to ofmap share
+        elems = (rarr[:, 1] - rarr[:, 0]) * (rarr[:, 3] - rarr[:, 2]) \
+            * (rarr[:, 5] - rarr[:, 4]) * (rarr[:, 7] - rarr[:, 6])
+        mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
+        pre.add(T_CORE_MACS, cores, elems * mac_per_elem)
+
+        # GLB footprint: weight slice + ofmap part (double-buffered fmaps)
+        w_share = lyr.weight_bytes() / max(1, ms.part[3]) if lyr.has_weight else 0
+        pre.add(T_GLB, cores, elems * bpe * 2 + w_share)
+
+        # intra-core engine: per-core compute time + GLB traffic of the
+        # chosen dataflows, in correspondence order (the order the scalar
+        # engine iterated regions in); pure geometry, cached per Part
+        t_arr, rd, wr = self._intra_geometry(name, ms.part, bu)
+        u_cores = np.asarray(ms.cg, dtype=np.int64)
+        pre.add(T_CORE_TIME, u_cores, t_arr)
+        zeros = np.zeros(len(rd), dtype=np.int64)
+        pre.add(T_GLB_RW, zeros, rd)
+        pre.add(T_GLB_RW, zeros + 1, wr)
+
+        # ---- weights: DRAM -> core, amortized over passes ----------------
+        if lyr.has_weight:
+            # each core holds the K-slice of its region (C,R,S full)
+            k_span = (rarr[:, 7] - rarr[:, 6])
+            w_bytes_core = k_span / max(1, lyr.K) * lyr.weight_bytes()
+            pre.weight_total = float(w_bytes_core.sum())
+            self._dram_flow(pre, T_EDGE_AM, T_DRAM_AM, ms.fd[1], nodes,
+                            w_bytes_core / n_passes, to_core=True)
+
+        # ---- ifmaps (external only; internal deps are edge contributions) --
+        preds = [p for p in g.preds(name)]
+        external = (not preds) or any(p not in in_group for p in preds)
+        if external and ms.fd[0] >= 0:
+            # full needed ifmap from DRAM (input of DNN or previous group)
+            if_bytes = self._external_ifmap_bytes(lyr, rarr, bu) * bpe
+            self._dram_flow(post, T_EDGE, T_DRAM, ms.fd[0], nodes,
+                            if_bytes, to_core=True)
+            post.add(T_CORE_IN, cores, if_bytes)
+
+        # ---- ofmaps ------------------------------------------------------
+        if ms.fd[2] >= 0:
+            of_bytes = elems * bpe
+            self._dram_flow(post, T_EDGE, T_DRAM, ms.fd[2], nodes,
+                            of_bytes.astype(float), to_core=False)
+            post.add(T_CORE_OUT, cores, of_bytes)
+
+        return self._layer_cache.put(
+            key, (pre.seal(self._offsets), post.seal(self._offsets)))
+
+    def _dep_contrib(self, pname: str, pms: MS, cname: str, cms: MS,
+                     bu: int) -> Contribution:
+        key = (self._layer_idx[pname], pms.geo,
+               self._layer_idx[cname], cms.geo, bu)
+        hit = self._dep_cache.get(key)
+        if hit is None:
+            contrib = Contribution()
+            self._dep_traffic(contrib, pname, pms, cname, cms, bu)
+            hit = self._dep_cache.put(key, contrib.seal(self._offsets))
+        return hit
+
+    def _group_topology(self, group: LayerGroup) -> List[Tuple[str, List[str]]]:
+        """Per layer, its in-group predecessors (graph scans done once)."""
+        key = group.names
+        hit = self._topo_cache.get(key)
+        if hit is None:
+            in_group = set(group.names)
+            hit = self._topo_cache.put(
+                key, [(n, [p for p in self.g.preds(n) if p in in_group])
+                      for n in group.names])
+        return hit
 
     # -- main entry ------------------------------------------------------------
     def analyze(self, group: LayerGroup, lms: LMS, total_batch: int) -> GroupAnalysis:
         arch, g = self.arch, self.g
         bu = group.batch_unit
         n_passes = max(1, -(-total_batch // bu))
-        in_group = set(group.names)
 
-        core_macs = np.zeros(arch.n_cores)
-        edge_bytes = np.zeros(self.grid.n_edges)
-        edge_amort = np.zeros(self.grid.n_edges)
-        dram_bytes = np.zeros(arch.n_dram)
-        dram_amort = np.zeros(arch.n_dram)
-        glb_need = np.zeros(arch.n_cores)
-        core_in = np.zeros(arch.n_cores)
-        core_out = np.zeros(arch.n_cores)
+        buf = np.zeros(self._buf_len)
+        arrays = [buf[lo:hi] for lo, hi in self._layout]
         weight_total = 0.0
+        gid = self._group_ids.setdefault(group.names, len(self._group_ids))
 
         regions_of: Dict[str, Dict[int, Region]] = {}
         for name in group.names:
-            regions_of[name] = parse_regions(lms.ms[name], g.layers[name], bu)
+            regions_of[name] = self.regions(name, lms.ms[name], bu)
 
-        for name in group.names:
-            lyr = g.layers[name]
-            ms = lms.ms[name]
-            regs = regions_of[name]
-            cores, rarr = _regions_to_array(regs)
-            nodes = self._core_nodes[cores]
-            bpe = lyr.bytes_per_elem
-
-            # compute: MACs proportional to ofmap share
-            elems = (rarr[:, 1] - rarr[:, 0]) * (rarr[:, 3] - rarr[:, 2]) \
-                * (rarr[:, 5] - rarr[:, 4]) * (rarr[:, 7] - rarr[:, 6])
-            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
-            np.add.at(core_macs, cores, elems * mac_per_elem)
-
-            # GLB footprint: weight slice + ofmap part (double-buffered fmaps)
-            w_share = lyr.weight_bytes() / max(1, ms.part[3]) if lyr.has_weight else 0
-            np.add.at(glb_need, cores, elems * bpe * 2 + w_share)
-
-            # ---- weights: DRAM -> core, amortized over passes ----------------
-            if lyr.has_weight:
-                w_bytes_core = np.full(len(cores), 0.0)
-                # each core holds the K-slice of its region (C,R,S full)
-                k_span = (rarr[:, 7] - rarr[:, 6])
-                w_bytes_core = k_span / max(1, lyr.K) * lyr.weight_bytes()
-                weight_total += float(w_bytes_core.sum())
-                self._dram_flow(edge_amort, dram_amort, ms.fd[1], nodes,
-                                w_bytes_core / n_passes, to_core=True)
-
-            # ---- ifmaps ------------------------------------------------------
-            preds = [p for p in g.preds(name)]
-            internal = [p for p in preds if p in in_group]
-            external = (not preds) or any(p not in in_group for p in preds)
-            for p in internal:
-                self._dep_traffic(edge_bytes, core_in, core_out,
-                                  g.layers[p], regions_of[p], lyr, regs, bu)
-            if external and ms.fd[0] >= 0:
-                # full needed ifmap from DRAM (input of DNN or previous group)
-                if_bytes = self._external_ifmap_bytes(lyr, rarr, bu) * bpe
-                self._dram_flow(edge_bytes, dram_bytes, ms.fd[0], nodes,
-                                if_bytes, to_core=True)
-                np.add.at(core_in, cores, if_bytes)
-
-            # ---- ofmaps ------------------------------------------------------
-            if ms.fd[2] >= 0:
-                of_bytes = elems * bpe
-                self._dram_flow(edge_bytes, dram_bytes, ms.fd[2], nodes,
-                                of_bytes.astype(float), to_core=False)
-                np.add.at(core_out, cores, of_bytes)
+        # gather every contribution's flat stream, concatenate once, replay
+        # with a single np.add.at — concatenation preserves the add order,
+        # so this is bit-identical to applying the contributions one by one
+        chunks_i: List[np.ndarray] = []
+        chunks_v: List[np.ndarray] = []
+        for name, internal_preds in self._group_topology(group):
+            pre, post = self._layer_contribs(name, lms.ms[name], bu,
+                                             n_passes, group, gid)
+            pre.collect(chunks_i, chunks_v)
+            weight_total += pre.weight_total
+            for p in internal_preds:
+                self._dep_contrib(p, lms.ms[p], name,
+                                  lms.ms[name], bu).collect(chunks_i,
+                                                            chunks_v)
+            post.collect(chunks_i, chunks_v)
+        if chunks_i:
+            np.add.at(buf, np.concatenate(chunks_i),
+                      np.concatenate(chunks_v))
 
         return GroupAnalysis(
-            arch=arch, batch_unit=bu, core_macs=core_macs,
-            edge_bytes=edge_bytes, edge_bytes_amortized=edge_amort,
-            dram_bytes=dram_bytes, dram_bytes_amortized=dram_amort,
-            core_glb_need=glb_need, core_in_bytes=core_in,
-            core_out_bytes=core_out, weight_dram_bytes_total=weight_total,
-            layer_parts=regions_of)
+            arch=arch, batch_unit=bu, core_macs=arrays[T_CORE_MACS],
+            edge_bytes=arrays[T_EDGE], edge_bytes_amortized=arrays[T_EDGE_AM],
+            dram_bytes=arrays[T_DRAM], dram_bytes_amortized=arrays[T_DRAM_AM],
+            core_glb_need=arrays[T_GLB], core_in_bytes=arrays[T_CORE_IN],
+            core_out_bytes=arrays[T_CORE_OUT],
+            weight_dram_bytes_total=weight_total,
+            layer_parts=regions_of,
+            core_time_s=arrays[T_CORE_TIME], glb_rw_bytes=arrays[T_GLB_RW])
 
     # -- pieces ---------------------------------------------------------------
     def _external_ifmap_bytes(self, lyr: Layer, rarr: np.ndarray,
@@ -283,10 +638,10 @@ class Analyzer:
             dk = np.full(len(rarr), max(1, lyr.C), dtype=np.int64)
         return dh * dw * db * dk
 
-    def _dram_flow(self, edge_bytes: np.ndarray, dram_bytes: np.ndarray,
+    def _dram_flow(self, contrib: Contribution, etarget: int, dtarget: int,
                    fd: int, nodes: np.ndarray, vols: np.ndarray,
                    to_core: bool) -> None:
-        """Route core<->DRAM volumes.  fd==0 interleaves over all ports."""
+        """Record core<->DRAM volumes.  fd==0 interleaves over all ports."""
         vols = np.asarray(vols, dtype=float)
         if np.ndim(vols) == 0:
             vols = np.full(len(nodes), float(vols))
@@ -295,73 +650,99 @@ class Analyzer:
             for d in range(self.arch.n_dram):
                 dn = np.full(len(nodes), self._dram_nodes[d])
                 if to_core:
-                    self._route(edge_bytes, dn, nodes, share)
+                    self._route(contrib, etarget, dn, nodes, share)
                 else:
-                    self._route(edge_bytes, nodes, dn, share)
-                dram_bytes[d] += float(share.sum())
+                    self._route(contrib, etarget, nodes, dn, share)
+                contrib.add(dtarget, d, float(share.sum()))
         else:
             d = fd - 1
             dn = np.full(len(nodes), self._dram_nodes[d])
             if to_core:
-                self._route(edge_bytes, dn, nodes, vols)
+                self._route(contrib, etarget, dn, nodes, vols)
             else:
-                self._route(edge_bytes, nodes, dn, vols)
-            dram_bytes[d] += float(vols.sum())
+                self._route(contrib, etarget, nodes, dn, vols)
+            contrib.add(dtarget, d, float(vols.sum()))
 
-    def _dep_traffic(self, edge_bytes: np.ndarray, core_in: np.ndarray,
-                     core_out: np.ndarray, prod: Layer,
-                     prod_regs: Dict[int, Region], cons: Layer,
-                     cons_regs: Dict[int, Region], bu: int) -> None:
+    def _dep_traffic(self, contrib: Contribution, pname: str, pms: MS,
+                     cname: str, cms: MS, bu: int) -> None:
         """Producer->consumer on-chip flow with K-multicast grouping.
 
         Consumers whose needed region is identical (K-partition siblings for
         channel-contracting layers) form one multicast set per producer part.
         """
-        p_cores, p_arr = _regions_to_array(prod_regs)
-        c_cores, c_arr = _regions_to_array(cons_regs)
+        prod, cons = self.g.layers[pname], self.g.layers[cname]
+        p_cores, _, p_ord = self._region_arrays(pname, pms, bu)
+        c_cores, _, c_ord = self._region_arrays(cname, cms, bu)
         bpe = prod.bytes_per_elem
 
-        # needed region of each consumer part, in producer-ofmap coordinates
-        need = np.empty_like(c_arr)
-        for i, cc in enumerate(c_cores):
-            r = cons_regs[cc]
-            nr = ifmap_region(cons, r, prod.K)
-            need[i] = [nr.h0, nr.h1, nr.w0, nr.w1, nr.b0, nr.b1, nr.k0, nr.k1]
+        # needed region of each consumer part, in producer-ofmap coordinates,
+        # with its multicast grouping (consumer parts sharing a need row)
+        need, mc_first, mc_members, mc_cn, mc_live = \
+            self._need_arrays(cname, cms, bu, prod.K)
 
-        ov = _overlap_matrix(p_arr, need)        # (P, Q) elems
-        if not ov.any():
+        # overlap counts are pure geometry (cached per Part pair); permute
+        # rows/columns from correspondence order into sorted-core order
+        ov_geo, any_ov = self._overlap_geometry(pname, pms.part, cname,
+                                                cms.part, bu, prod.K)
+        if not any_ov:
             return
-        p_nodes = self._core_nodes[p_cores]
-        c_nodes = self._core_nodes[c_cores]
+        ov = ov_geo[p_ord[:, None], c_ord[None, :]]   # (P, Q) elems
+        p_nodes = self._region_nodes(pname, pms, bu)
+        c_nodes = self._region_nodes(cname, cms, bu)
 
         contracting = cons.kind in ("conv", "fc", "matmul")
         if contracting:
-            # group consumer parts by identical 'need' signature -> multicast
-            sig = [tuple(row) for row in need]
-            groups: Dict[Tuple, List[int]] = {}
-            for qi, s in enumerate(sig):
-                groups.setdefault(s, []).append(qi)
-            for s, qis in groups.items():
-                vols = ov[:, qis[0]].astype(float) * bpe   # same for all members
-                for pi in np.nonzero(vols)[0]:
-                    dsts = [int(c_nodes[q]) for q in qis
-                            if c_nodes[q] != p_nodes[pi]]
-                    self._route_multicast(edge_bytes, int(p_nodes[pi]),
-                                          dsts, float(vols[pi]))
-                    core_out[p_cores[pi]] += vols[pi] * (1 if dsts else 0)
-                    for q in qis:
-                        if c_nodes[q] != p_nodes[pi]:
-                            core_in[c_cores[q]] += vols[pi]
+            # one 3-d batch over (sibling group g, producer part p, member q);
+            # the accumulation order is (g, p, q) — the order of the
+            # historical nested loop
+            G, Qmax = mc_members.shape
+            P = len(p_cores)
+            vols = ov[:, mc_first].T * np.float64(bpe)        # (G, P)
+            cn = mc_cn                                        # (G, Qmax)
+            off_node = (p_nodes[None, :, None] != cn[:, None, :]) \
+                & mc_live[:, None, :]                         # (G, P, Qmax)
+            live = vols > 0                                   # (G, P)
+            act = off_node & live[:, :, None]                 # (G, P, Qmax)
+            # union of XY paths per (g, p) over its off-node members; both
+            # forms produce the edge ids ascending per (g, p) row — the
+            # sorted-unique set np.unique would give
+            if self._path_mask is not None:
+                pm = self._path_mask[p_nodes[None, :, None], cn[:, None, :]]
+                union = (pm & act[..., None]).any(axis=2)     # (G, P, E)
+                union = union.reshape(G * P, -1)
+                gp_idx, e_idx = np.nonzero(union)
+                contrib.add(T_EDGE, e_idx,
+                            vols.reshape(-1)[gp_idx])
+            else:
+                paths = self.grid.paths[
+                    np.broadcast_to(p_nodes[None, :, None], off_node.shape),
+                    np.broadcast_to(cn[:, None, :], off_node.shape)]
+                paths = np.where(act[..., None], paths, -1)
+                srt = np.sort(paths.reshape(G * P, -1), axis=1)
+                first = np.empty_like(srt, dtype=bool)
+                first[:, 0] = True
+                first[:, 1:] = srt[:, 1:] != srt[:, :-1]
+                keep = (srt >= 0) & first
+                contrib.add(T_EDGE, srt[keep],
+                            np.repeat(vols.reshape(-1), keep.sum(axis=1)))
+            has_dst = off_node.any(axis=2)                    # (G, P)
+            g_idx, p_idx = np.nonzero(live)
+            contrib.add(T_CORE_OUT, p_cores[p_idx],
+                        (vols * has_dst)[g_idx, p_idx])
+            # each off-node member receives the full volume
+            g_idx, p_idx, q_idx = np.nonzero(act)
+            contrib.add(T_CORE_IN, c_cores[mc_members[g_idx, q_idx]],
+                        vols[g_idx, p_idx])
         else:
             vols = ov.astype(float) * bpe
             same = p_nodes[:, None] == c_nodes[None, :]
             vols_off = np.where(same, 0.0, vols)
             P, Q = vols.shape
-            self._route(edge_bytes,
+            self._route(contrib, T_EDGE,
                         np.repeat(p_nodes, Q), np.tile(c_nodes, P),
                         vols_off.reshape(-1))
-            np.add.at(core_out, p_cores, vols_off.sum(axis=1))
-            np.add.at(core_in, c_cores, vols_off.sum(axis=0))
+            contrib.add(T_CORE_OUT, p_cores, vols_off.sum(axis=1))
+            contrib.add(T_CORE_IN, c_cores, vols_off.sum(axis=0))
 
 
 def d2d_hop_stats(arch: ArchConfig, analyses: Sequence[GroupAnalysis]) -> Dict[str, float]:

@@ -14,7 +14,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .evaluator import Evaluator
+from .evaluator import CachedEvaluator
 from .graph_partition import partition_graph
 from .hw import ArchConfig, TECH_12NM
 from .mc import evaluate_mc
@@ -91,7 +91,8 @@ def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
     maps: Dict[str, Mapping] = {}
     for name, g in workloads.items():
         groups = partition_graph(g, arch, cfg.batch)
-        ev = Evaluator(arch, g)
+        # cached: multi-chain SA and the T-Map screening re-hit group evals
+        ev = CachedEvaluator(arch, g)
         if use_sa:
             res = sa_optimize(g, arch, groups, cfg.batch, cfg.sa, evaluator=ev)
             E, D, mapping = res.energy_j, res.delay_s, res.mapping

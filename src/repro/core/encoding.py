@@ -19,6 +19,7 @@ exactly the paper's ``h*W*B*K + w*B*K + b*K + k``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
+from functools import lru_cache
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -62,6 +63,16 @@ class MS:
             raise ValueError("CG has duplicate cores")
         if min(self.part) < 1:
             raise ValueError(f"Part must be >=1, got {self.part}")
+        # MS is the key of every analyzer/evaluator memo table — hash once.
+        # ``geo`` identifies everything except the DRAM endpoints: region
+        # tables, NoC dependency traffic and intra-core dataflows are pure
+        # functions of it, so FD-only changes (SA OP5) stay cache hits.
+        object.__setattr__(self, "_hash",
+                           hash((self.part, self.cg, self.fd)))
+        object.__setattr__(self, "geo", (self.part, self.cg))
+
+    def __hash__(self) -> int:
+        return self._hash
 
     def part_index(self, h: int, w: int, b: int, k: int) -> int:
         ph, pw, pb, pk = self.part
@@ -81,6 +92,14 @@ class LMS:
         for m in self.ms.values():
             out.extend(m.cg)
         return tuple(out)
+
+    def cache_key(self) -> Tuple:
+        """Stable hashable identity (the ``ms`` dict itself is unhashable).
+
+        Sorted by layer name so two LMS with the same per-layer MS but
+        different dict insertion order share one key."""
+        return tuple(sorted((n, m.part, m.cg, m.fd)
+                            for n, m in self.ms.items()))
 
     def validate(self, group: LayerGroup, g: Graph, n_cores: int,
                  n_dram: int) -> None:
@@ -138,23 +157,42 @@ class Region:
         return dh * dw * db * dk
 
 
-def parse_regions(m: MS, layer: Layer, batch_unit: int) -> Dict[int, Region]:
-    """Correspondence Rule: core id -> its ofmap Region."""
+@lru_cache(maxsize=65536)
+def _split_cached(dim: int, parts: int) -> np.ndarray:
+    return split_points(dim, parts)
+
+
+def parse_regions_arrays(m: MS, layer: Layer,
+                         batch_unit: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Correspondence Rule, vectorized: (cores (N,), regions (N,8)).
+
+    Rows are [h0,h1,w0,w1,b0,b1,k0,k1] in *correspondence order* — the
+    (h, w, b, k) C-order nesting of the Rule, under which row i belongs to
+    core ``CG[i]`` — NOT sorted by core id."""
     ph, pw, pb, pk = m.part
-    hs = split_points(layer.H, ph)
-    ws = split_points(layer.W, pw)
-    bs = split_points(batch_unit, pb)
-    ks = split_points(layer.K, pk)
-    out: Dict[int, Region] = {}
-    for h in range(ph):
-        for w in range(pw):
-            for b in range(pb):
-                for k in range(pk):
-                    core = m.core_of(h, w, b, k)
-                    out[core] = Region(
-                        int(hs[h]), int(hs[h + 1]), int(ws[w]), int(ws[w + 1]),
-                        int(bs[b]), int(bs[b + 1]), int(ks[k]), int(ks[k + 1]))
-    return out
+    hs = _split_cached(layer.H, ph)
+    ws = _split_cached(layer.W, pw)
+    bs = _split_cached(batch_unit, pb)
+    ks = _split_cached(layer.K, pk)
+    ih, iw, ib, ik = np.indices((ph, pw, pb, pk)).reshape(4, -1)
+    rarr = np.empty((len(ih), 8), dtype=np.int64)
+    rarr[:, 0] = hs[ih]
+    rarr[:, 1] = hs[ih + 1]
+    rarr[:, 2] = ws[iw]
+    rarr[:, 3] = ws[iw + 1]
+    rarr[:, 4] = bs[ib]
+    rarr[:, 5] = bs[ib + 1]
+    rarr[:, 6] = ks[ik]
+    rarr[:, 7] = ks[ik + 1]
+    return np.asarray(m.cg, dtype=np.int64), rarr
+
+
+def parse_regions(m: MS, layer: Layer, batch_unit: int) -> Dict[int, Region]:
+    """Correspondence Rule: core id -> its ofmap Region (insertion order =
+    correspondence order, which downstream accumulation relies on)."""
+    cores, rarr = parse_regions_arrays(m, layer, batch_unit)
+    return {c: Region(*row)
+            for c, row in zip(cores.tolist(), rarr.tolist())}
 
 
 def ifmap_region(layer: Layer, r: Region, in_K: int) -> Region:
@@ -184,6 +222,11 @@ def ifmap_region(layer: Layer, r: Region, in_K: int) -> Region:
 # Generators: random LMS + valid Part enumeration
 # ---------------------------------------------------------------------------
 
+@lru_cache(maxsize=8192)
+def _divisors_upto(n: int, cap: int) -> Tuple[int, ...]:
+    return tuple(d for d in range(1, min(n, cap) + 1) if n % d == 0)
+
+
 def factor_parts(n: int, dims: Tuple[int, int, int, int],
                  rng: np.random.Generator) -> Part:
     """Random 4-way factorization of ``n`` respecting per-dim caps."""
@@ -197,12 +240,14 @@ def factor_parts(n: int, dims: Tuple[int, int, int, int],
             if i == 3:
                 f = rem
             else:
-                divs = [d for d in range(1, min(rem, caps[axis]) + 1)
-                        if rem % d == 0]
+                divs = _divisors_upto(rem, caps[axis])
                 if not divs:
                     ok = False
                     break
-                f = int(rng.choice(divs))
+                # index draw instead of rng.choice: choice() converts the
+                # tuple to an ndarray on every call, which dominates the
+                # proposal cost in tight SA loops
+                f = divs[int(rng.integers(len(divs)))]
             if f > caps[axis]:
                 ok = False
                 break

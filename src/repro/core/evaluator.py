@@ -12,10 +12,20 @@ the depth term — the Tangram/SET model).  Energy sums MACs, GLB traffic
 (from the intra-core exploration), NoC hop bytes, D2D crossing bytes and
 DRAM bytes, each times its unit energy.  GLB overcommit is penalized softly
 (spill traffic + delay multiplier) to keep the SA landscape smooth.
+
+Hot path: every per-core intra-core signature is collected per layer and
+resolved through the batch API (``explore_intra_core_many``, deduped +
+memoized) inside the analyzer's cached contribution streams; core time and
+GLB traffic arrive as ``np.add.at`` scatter-add replays — no Python triple
+loops.  ``CachedEvaluator`` adds a
+content-addressed ``GroupEval`` cache keyed on (group id, LMS key, batch):
+SA operators produce *new* LMS values, so cached entries never go stale and
+OP1-OP5 only ever pay for the group they touched (see DESIGN.md).
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -24,7 +34,6 @@ import numpy as np
 from .analyzer import Analyzer, GroupAnalysis, router_grid
 from .encoding import LMS
 from .hw import ArchConfig
-from .intra_core import explore_intra_core
 from .workload import Graph, LayerGroup
 
 
@@ -75,6 +84,17 @@ class Evaluator:
         self.g = g
         self.analyzer = Analyzer(arch, g)
         self.grid = router_grid(arch)
+        self._is_d2d = self.grid.edge_is_d2d
+        self._not_d2d = ~self._is_d2d
+        self._has_d2d = bool(self._is_d2d.any())
+        self._depth_cache: Dict[Tuple[str, ...], int] = {}
+
+    # ------------------------------------------------------------------
+    def _group_depth(self, group: LayerGroup) -> int:
+        d = self._depth_cache.get(group.names)
+        if d is None:
+            d = self._depth_cache[group.names] = _pipeline_depth(self.g, group)
+        return d
 
     # ------------------------------------------------------------------
     def eval_group(self, group: LayerGroup, lms: LMS,
@@ -83,40 +103,32 @@ class Evaluator:
         an = self.analyzer.analyze(group, lms, total_batch)
         bu = group.batch_unit
         n_passes = max(1, -(-total_batch // bu))
-        depth = _pipeline_depth(g, group)
+        depth = self._group_depth(group)
 
-        # -- per-core compute time (uses intra-core utilization) -----------
-        core_time = np.zeros(arch.n_cores)
-        glb_rd = 0.0
-        glb_wr = 0.0
-        for name, regs in an.layer_parts.items():
-            lyr = g.layers[name]
-            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
-            for core, r in regs.items():
-                rk = r.k1 - r.k0
-                hwb = max(1, r.elems // max(1, rk))
-                df = explore_intra_core(rk, lyr.C, hwb, lyr.R, lyr.S,
-                                        lyr.bytes_per_elem, arch.core_glb_bytes,
-                                        arch.macs_per_core, lyr.kind)
-                macs = r.elems * mac_per_elem
-                peak = arch.macs_per_core * arch.freq_ghz * 1e9
-                core_time[core] += macs / (peak * max(df.utilization, 1e-3))
-                glb_rd += df.glb_read_bytes
-                glb_wr += df.glb_write_bytes
+        # -- per-core compute time + GLB traffic (intra-core engine) -------
+        # resolved inside the analyzer's cached contribution streams via
+        # the batch dataflow API (explore_intra_core_many)
+        core_time = an.core_time_s
+        glb_rd = float(an.glb_rw_bytes[0])
+        glb_wr = float(an.glb_rw_bytes[1])
 
         # -- resource times per pass ---------------------------------------
         edge_tot = an.edge_bytes + an.edge_bytes_amortized
-        is_d2d = self.grid.edge_is_d2d
-        t_noc = float((edge_tot[~is_d2d] / (arch.noc_bw * 1e9)).max(initial=0.0))
+        is_d2d, not_d2d = self._is_d2d, self._not_d2d
+        t_noc = float((edge_tot[not_d2d] / (arch.noc_bw * 1e9)).max(initial=0.0))
         t_d2d = float((edge_tot[is_d2d] / (arch.d2d_bw * 1e9)).max(initial=0.0)) \
-            if is_d2d.any() else 0.0
+            if self._has_d2d else 0.0
         dram_port_bw = arch.dram_bw / arch.n_dram * 1e9
         t_dram = float(((an.dram_bytes + an.dram_bytes_amortized)
                         / dram_port_bw).max(initial=0.0))
         t_comp = float(core_time.max(initial=0.0))
         stage = max(t_comp, t_noc, t_d2d, t_dram, 1e-12)
-        bottleneck = ["compute", "noc", "d2d", "dram"][
-            int(np.argmax([t_comp, t_noc, t_d2d, t_dram]))]
+        # first-maximum pick, same tie-break as np.argmax over the four times
+        bi, bv = 0, t_comp
+        for i, v in enumerate((t_noc, t_d2d, t_dram), start=1):
+            if v > bv:
+                bi, bv = i, v
+        bottleneck = ("compute", "noc", "d2d", "dram")[bi]
 
         # -- GLB overcommit: soft penalty -----------------------------------
         over = np.maximum(an.core_glb_need - arch.core_glb_bytes, 0.0)
@@ -129,7 +141,7 @@ class Evaluator:
         delay = stage * (n_passes + depth - 1)
 
         # -- energy over the whole batch -------------------------------------
-        noc_bytes = float(edge_tot[~is_d2d].sum()) * n_passes
+        noc_bytes = float(edge_tot[not_d2d].sum()) * n_passes
         d2d_bytes = float(edge_tot[is_d2d].sum()) * n_passes
         dram_b = float(an.dram_bytes.sum()) * n_passes \
             + an.weight_dram_bytes_total + spill_dram * n_passes
@@ -161,3 +173,44 @@ class Evaluator:
             delay_s=sum(ge.delay_s for ge in groups),
             energy_j=sum(ge.energy_j for ge in groups),
             groups=groups, analyses=analyses)
+
+
+class CachedEvaluator(Evaluator):
+    """Content-addressed ``GroupEval`` cache on top of :class:`Evaluator`.
+
+    Key: ``(group id, LMS cache key, total_batch)`` where the group id is the
+    (names, batch_unit) pair.  SA operators OP1-OP5 build *new* LMS values
+    rather than mutating in place, so a cached entry can never go stale for a
+    fixed (arch, graph) — re-proposals, repeated MC scoring sweeps and the
+    final exact re-evaluation of the best mapping all hit the cache.  Callers
+    must treat the returned (GroupEval, GroupAnalysis) as immutable: the
+    tuple is shared between cache hits.  If the arch or graph changes, build
+    a new evaluator — there is deliberately no invalidation API (DESIGN.md).
+    """
+
+    def __init__(self, arch: ArchConfig, g: Graph, maxsize: int = 20_000):
+        super().__init__(arch, g)
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._cache: "OrderedDict[Tuple, Tuple[GroupEval, GroupAnalysis]]" \
+            = OrderedDict()
+
+    def eval_group(self, group: LayerGroup, lms: LMS,
+                   total_batch: int) -> Tuple[GroupEval, GroupAnalysis]:
+        key = (group.names, group.batch_unit, lms.cache_key(), total_batch)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return hit
+        self.misses += 1
+        out = super().eval_group(group, lms, total_batch)
+        self._cache[key] = out
+        if len(self._cache) > self.maxsize:
+            self._cache.popitem(last=False)
+        return out
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._cache)}

@@ -13,6 +13,7 @@ chiplet's boundaries; IO dies carry DDR PHYs, PCIe and their D2D column.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from math import ceil
 from typing import Dict
 
@@ -55,7 +56,13 @@ def _package_rate(tech: Tech, substrate_area: float, n_chiplets: int) -> float:
     return tech.c_package_tiers[-1][1]
 
 
+@lru_cache(maxsize=65536)
 def evaluate_mc(arch: ArchConfig) -> MCBreakdown:
+    """Monetary cost of one architecture point.
+
+    Pure in the frozen ``ArchConfig``, so results are memoized: the DSE grid
+    scorer and ``joint_reuse_dse`` (which revisits each base chiplet once per
+    scale factor) pay for each architecture exactly once."""
     t = arch.tech
     cores_per_chiplet = arch.n_cores // arch.n_chiplets
     ifaces_per_chiplet = arch.d2d_interfaces_per_chiplet

@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .encoding import (LMS, MS, factor_parts, space_size_lower_bound)
-from .evaluator import Evaluator, GroupEval
+from .evaluator import CachedEvaluator, Evaluator, GroupEval
 from .hw import ArchConfig
 from .tangram import tangram_map
 from .workload import Graph, LayerGroup
@@ -90,8 +90,19 @@ class _Op:
         l = self.g.layers[name]
         return (l.H, l.W, grp.batch_unit, l.K)
 
+    def _pick(self, seq):
+        # index draw: rng.choice() converts the sequence to an ndarray on
+        # every call, which dominates proposal cost in tight SA loops
+        return seq[int(self.rng.integers(len(seq)))]
+
+    def _pick2(self, n: int) -> Tuple[int, int]:
+        """Two distinct indices in [0, n), uniform over ordered pairs."""
+        i = int(self.rng.integers(n))
+        j = int(self.rng.integers(n - 1))
+        return i, j + (j >= i)
+
     def op1(self, grp: LayerGroup, lms: LMS) -> Optional[LMS]:
-        name = str(self.rng.choice(list(grp.names)))
+        name = self._pick(grp.names)
         ms = lms.ms[name]
         try:
             part = factor_parts(ms.nc, self._dims(name, grp), self.rng)
@@ -107,9 +118,9 @@ class _Op:
         cands = [n for n in grp.names if lms.ms[n].nc >= 2]
         if not cands:
             return None
-        name = str(self.rng.choice(cands))
+        name = self._pick(cands)
         ms = lms.ms[name]
-        i, j = self.rng.choice(ms.nc, size=2, replace=False)
+        i, j = self._pick2(ms.nc)
         cg = list(ms.cg)
         cg[i], cg[j] = cg[j], cg[i]
         new = dict(lms.ms)
@@ -119,8 +130,8 @@ class _Op:
     def op3(self, grp: LayerGroup, lms: LMS) -> Optional[LMS]:
         if len(grp.names) < 2:
             return None
-        a, b = self.rng.choice(len(grp.names), size=2, replace=False)
-        na, nb = grp.names[int(a)], grp.names[int(b)]
+        a, b = self._pick2(len(grp.names))
+        na, nb = grp.names[a], grp.names[b]
         ma, mb = lms.ms[na], lms.ms[nb]
         ia = int(self.rng.integers(ma.nc))
         ib = int(self.rng.integers(mb.nc))
@@ -146,7 +157,7 @@ class _Op:
             core = new_idle.pop(int(self.rng.integers(len(new_idle))))
             donor = None
         else:
-            donor = str(self.rng.choice(donors))
+            donor = self._pick(donors)
             md = new[donor]
             di = int(self.rng.integers(md.nc))
             core = md.cg[di]
@@ -164,7 +175,7 @@ class _Op:
                 return None              # idle -> idle is a no-op
             new_idle.append(core)
         else:
-            recv = str(self.rng.choice(recv_cands))
+            recv = self._pick(recv_cands)
             mr = new[recv]
             pos = int(self.rng.integers(mr.nc + 1))
             cgr = mr.cg[:pos] + (core,) + mr.cg[pos:]
@@ -211,7 +222,9 @@ def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
               total_batch: int, cfg: SAConfig, init: Optional[Mapping],
               evaluator: Optional[Evaluator]) -> SAResult:
     rng = np.random.default_rng(cfg.seed)
-    ev = evaluator or Evaluator(arch, g)
+    # content-addressed GroupEval cache: re-proposals, repeated chains and
+    # the final exact re-evaluation hit it; results are identical either way
+    ev = evaluator or CachedEvaluator(arch, g)
     mapping: Mapping = [(grp, lms) for grp, lms in
                         (init if init is not None else tangram_map(groups, g, arch))]
     # idle cores per group
@@ -233,6 +246,10 @@ def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
     cost, E, D = total_cost()
     best_cost, best_map = cost, [(grp, lms) for grp, lms in mapping]
     weights = _group_weights(groups, arch.n_cores)
+    # inverse-CDF group draw: rng.choice(..., p=weights) re-normalizes and
+    # allocates on every call
+    cum_w = np.cumsum(weights)
+    cum_w[-1] = 1.0
     ops = _Op(g, arch, rng)
     t0 = cfg.t0 * cost
     alpha = (cfg.t_end / cfg.t0) ** (1.0 / max(1, cfg.iters))
@@ -241,7 +258,7 @@ def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
     accepted = proposed = 0
 
     for it in range(cfg.iters):
-        gi = int(rng.choice(len(mapping), p=weights))
+        gi = int(np.searchsorted(cum_w, rng.random(), side="right"))
         grp, lms = mapping[gi]
         op = int(rng.integers(1, 6))
         new_idle: Optional[List[int]] = None

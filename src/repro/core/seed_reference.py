@@ -1,0 +1,357 @@
+"""Seed (pre-vectorization) evaluation engine, kept verbatim as an oracle.
+
+This module preserves the repository's original scalar evaluation path —
+the per-region Python loops over ``explore_intra_core_reference`` and the
+uncached per-call LP-SPM analysis — exactly as it shipped in the seed
+commit (only class names and the intra-core entry point are renamed).
+
+Two consumers:
+  * ``tests/test_vectorized_engine.py`` pins the vectorized engine against
+    this one: ``GroupEval`` results must match bit-for-bit on arbitrary
+    mappings, not just stored golden numbers;
+  * ``benchmarks/misc_bench.py::evaluator_throughput`` times both engines
+    in the same process, so the reported speedup is independent of the
+    machine's load at benchmark time.
+
+Do not optimize this file; its value is that it never changes.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .analyzer import (GroupAnalysis, RouterGrid, _overlap_matrix,
+                       _regions_to_array, router_grid)
+from .encoding import LMS, MS, Region, ifmap_region, parse_regions
+from .evaluator import EvalResult, GroupEval
+from .hw import ArchConfig
+from .intra_core import explore_intra_core_reference
+from .workload import Graph, Layer, LayerGroup
+
+# the seed memoized its intra-core search on the workload signature; mirror
+# that here so throughput comparisons against this engine are fair
+_explore_seed = lru_cache(maxsize=200_000)(explore_intra_core_reference)
+
+
+class ReferenceAnalyzer:
+    """Stateful per-(arch, graph) analyzer; reused across SA iterations."""
+
+    def __init__(self, arch: ArchConfig, g: Graph):
+        self.arch = arch
+        self.g = g
+        self.grid = router_grid(arch)
+        self._core_nodes = np.array(
+            [arch.core_node(c) for c in range(arch.n_cores)], dtype=np.int64)
+        self._dram_nodes = np.array(
+            [arch.dram_node(d) for d in range(1, arch.n_dram + 1)], dtype=np.int64)
+
+    # -- routing helpers -----------------------------------------------------
+    def _route(self, edge_bytes: np.ndarray, src_nodes: np.ndarray,
+               dst_nodes: np.ndarray, vols: np.ndarray) -> None:
+        """Accumulate unicast volumes onto edge loads (vectorized)."""
+        mask = vols > 0
+        if not mask.any():
+            return
+        s, d, v = src_nodes[mask], dst_nodes[mask], vols[mask]
+        paths = self.grid.paths[s, d]            # (n, max_len)
+        flat = paths.reshape(-1)
+        keep = flat >= 0
+        np.add.at(edge_bytes, flat[keep],
+                  np.repeat(v, paths.shape[1])[keep])
+
+    def _route_multicast(self, edge_bytes: np.ndarray, src_node: int,
+                         dst_nodes: Sequence[int], vol: float) -> None:
+        """One producer datum to many consumers: union of XY paths, counted once."""
+        if vol <= 0 or not len(dst_nodes):
+            return
+        paths = self.grid.paths[src_node, np.asarray(dst_nodes, dtype=np.int64)]
+        edges = np.unique(paths[paths >= 0])
+        edge_bytes[edges] += vol
+
+    # -- main entry ------------------------------------------------------------
+    def analyze(self, group: LayerGroup, lms: LMS, total_batch: int) -> GroupAnalysis:
+        arch, g = self.arch, self.g
+        bu = group.batch_unit
+        n_passes = max(1, -(-total_batch // bu))
+        in_group = set(group.names)
+
+        core_macs = np.zeros(arch.n_cores)
+        edge_bytes = np.zeros(self.grid.n_edges)
+        edge_amort = np.zeros(self.grid.n_edges)
+        dram_bytes = np.zeros(arch.n_dram)
+        dram_amort = np.zeros(arch.n_dram)
+        glb_need = np.zeros(arch.n_cores)
+        core_in = np.zeros(arch.n_cores)
+        core_out = np.zeros(arch.n_cores)
+        weight_total = 0.0
+
+        regions_of: Dict[str, Dict[int, Region]] = {}
+        for name in group.names:
+            regions_of[name] = parse_regions(lms.ms[name], g.layers[name], bu)
+
+        for name in group.names:
+            lyr = g.layers[name]
+            ms = lms.ms[name]
+            regs = regions_of[name]
+            cores, rarr = _regions_to_array(regs)
+            nodes = self._core_nodes[cores]
+            bpe = lyr.bytes_per_elem
+
+            # compute: MACs proportional to ofmap share
+            elems = (rarr[:, 1] - rarr[:, 0]) * (rarr[:, 3] - rarr[:, 2]) \
+                * (rarr[:, 5] - rarr[:, 4]) * (rarr[:, 7] - rarr[:, 6])
+            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
+            np.add.at(core_macs, cores, elems * mac_per_elem)
+
+            # GLB footprint: weight slice + ofmap part (double-buffered fmaps)
+            w_share = lyr.weight_bytes() / max(1, ms.part[3]) if lyr.has_weight else 0
+            np.add.at(glb_need, cores, elems * bpe * 2 + w_share)
+
+            # ---- weights: DRAM -> core, amortized over passes ----------------
+            if lyr.has_weight:
+                w_bytes_core = np.full(len(cores), 0.0)
+                # each core holds the K-slice of its region (C,R,S full)
+                k_span = (rarr[:, 7] - rarr[:, 6])
+                w_bytes_core = k_span / max(1, lyr.K) * lyr.weight_bytes()
+                weight_total += float(w_bytes_core.sum())
+                self._dram_flow(edge_amort, dram_amort, ms.fd[1], nodes,
+                                w_bytes_core / n_passes, to_core=True)
+
+            # ---- ifmaps ------------------------------------------------------
+            preds = [p for p in g.preds(name)]
+            internal = [p for p in preds if p in in_group]
+            external = (not preds) or any(p not in in_group for p in preds)
+            for p in internal:
+                self._dep_traffic(edge_bytes, core_in, core_out,
+                                  g.layers[p], regions_of[p], lyr, regs, bu)
+            if external and ms.fd[0] >= 0:
+                # full needed ifmap from DRAM (input of DNN or previous group)
+                if_bytes = self._external_ifmap_bytes(lyr, rarr, bu) * bpe
+                self._dram_flow(edge_bytes, dram_bytes, ms.fd[0], nodes,
+                                if_bytes, to_core=True)
+                np.add.at(core_in, cores, if_bytes)
+
+            # ---- ofmaps ------------------------------------------------------
+            if ms.fd[2] >= 0:
+                of_bytes = elems * bpe
+                self._dram_flow(edge_bytes, dram_bytes, ms.fd[2], nodes,
+                                of_bytes.astype(float), to_core=False)
+                np.add.at(core_out, cores, of_bytes)
+
+        return GroupAnalysis(
+            arch=arch, batch_unit=bu, core_macs=core_macs,
+            edge_bytes=edge_bytes, edge_bytes_amortized=edge_amort,
+            dram_bytes=dram_bytes, dram_bytes_amortized=dram_amort,
+            core_glb_need=glb_need, core_in_bytes=core_in,
+            core_out_bytes=core_out, weight_dram_bytes_total=weight_total,
+            layer_parts=regions_of)
+
+    # -- pieces ---------------------------------------------------------------
+    def _external_ifmap_bytes(self, lyr: Layer, rarr: np.ndarray,
+                              bu: int) -> np.ndarray:
+        """Elements of DNN-level input each core must fetch (halo included)."""
+        s = lyr.stride
+        dh = (rarr[:, 1] - rarr[:, 0]) * s + (lyr.R - 1)
+        dw = (rarr[:, 3] - rarr[:, 2]) * s + (lyr.S - 1)
+        db = rarr[:, 5] - rarr[:, 4]
+        if lyr.kind in ("eltwise", "pool", "depthwise"):
+            dk = (rarr[:, 7] - rarr[:, 6]) * (lyr.n_inputs if lyr.kind == "eltwise" else 1)
+        elif lyr.kind == "matmul":
+            # both operands streamed: rows of A for H-range + full B operand share
+            dk = np.full(len(rarr), lyr.C, dtype=np.int64)
+            return (rarr[:, 1] - rarr[:, 0]) * db * lyr.C \
+                + (rarr[:, 7] - rarr[:, 6]) * db * lyr.C
+        else:
+            dk = np.full(len(rarr), max(1, lyr.C), dtype=np.int64)
+        return dh * dw * db * dk
+
+    def _dram_flow(self, edge_bytes: np.ndarray, dram_bytes: np.ndarray,
+                   fd: int, nodes: np.ndarray, vols: np.ndarray,
+                   to_core: bool) -> None:
+        """Route core<->DRAM volumes.  fd==0 interleaves over all ports."""
+        vols = np.asarray(vols, dtype=float)
+        if np.ndim(vols) == 0:
+            vols = np.full(len(nodes), float(vols))
+        if fd == 0:
+            share = vols / self.arch.n_dram
+            for d in range(self.arch.n_dram):
+                dn = np.full(len(nodes), self._dram_nodes[d])
+                if to_core:
+                    self._route(edge_bytes, dn, nodes, share)
+                else:
+                    self._route(edge_bytes, nodes, dn, share)
+                dram_bytes[d] += float(share.sum())
+        else:
+            d = fd - 1
+            dn = np.full(len(nodes), self._dram_nodes[d])
+            if to_core:
+                self._route(edge_bytes, dn, nodes, vols)
+            else:
+                self._route(edge_bytes, nodes, dn, vols)
+            dram_bytes[d] += float(vols.sum())
+
+    def _dep_traffic(self, edge_bytes: np.ndarray, core_in: np.ndarray,
+                     core_out: np.ndarray, prod: Layer,
+                     prod_regs: Dict[int, Region], cons: Layer,
+                     cons_regs: Dict[int, Region], bu: int) -> None:
+        """Producer->consumer on-chip flow with K-multicast grouping.
+
+        Consumers whose needed region is identical (K-partition siblings for
+        channel-contracting layers) form one multicast set per producer part.
+        """
+        p_cores, p_arr = _regions_to_array(prod_regs)
+        c_cores, c_arr = _regions_to_array(cons_regs)
+        bpe = prod.bytes_per_elem
+
+        # needed region of each consumer part, in producer-ofmap coordinates
+        need = np.empty_like(c_arr)
+        for i, cc in enumerate(c_cores):
+            r = cons_regs[cc]
+            nr = ifmap_region(cons, r, prod.K)
+            need[i] = [nr.h0, nr.h1, nr.w0, nr.w1, nr.b0, nr.b1, nr.k0, nr.k1]
+
+        ov = _overlap_matrix(p_arr, need)        # (P, Q) elems
+        if not ov.any():
+            return
+        p_nodes = self._core_nodes[p_cores]
+        c_nodes = self._core_nodes[c_cores]
+
+        contracting = cons.kind in ("conv", "fc", "matmul")
+        if contracting:
+            # group consumer parts by identical 'need' signature -> multicast
+            sig = [tuple(row) for row in need]
+            groups: Dict[Tuple, List[int]] = {}
+            for qi, s in enumerate(sig):
+                groups.setdefault(s, []).append(qi)
+            for s, qis in groups.items():
+                vols = ov[:, qis[0]].astype(float) * bpe   # same for all members
+                for pi in np.nonzero(vols)[0]:
+                    dsts = [int(c_nodes[q]) for q in qis
+                            if c_nodes[q] != p_nodes[pi]]
+                    self._route_multicast(edge_bytes, int(p_nodes[pi]),
+                                          dsts, float(vols[pi]))
+                    core_out[p_cores[pi]] += vols[pi] * (1 if dsts else 0)
+                    for q in qis:
+                        if c_nodes[q] != p_nodes[pi]:
+                            core_in[c_cores[q]] += vols[pi]
+        else:
+            vols = ov.astype(float) * bpe
+            same = p_nodes[:, None] == c_nodes[None, :]
+            vols_off = np.where(same, 0.0, vols)
+            P, Q = vols.shape
+            self._route(edge_bytes,
+                        np.repeat(p_nodes, Q), np.tile(c_nodes, P),
+                        vols_off.reshape(-1))
+            np.add.at(core_out, p_cores, vols_off.sum(axis=1))
+            np.add.at(core_in, c_cores, vols_off.sum(axis=0))
+
+
+def _pipeline_depth_ref(g: Graph, group: LayerGroup) -> int:
+    """Longest dependency chain within the group (fill/drain passes)."""
+    names = set(group.names)
+    depth: Dict[str, int] = {}
+    for n in g.topo_order():
+        if n not in names:
+            continue
+        preds = [p for p in g.preds(n) if p in names]
+        depth[n] = 1 + max((depth[p] for p in preds), default=0)
+    return max(depth.values(), default=1)
+
+
+class ReferenceEvaluator:
+    """Per-(arch, graph) evaluator; reuses the Analyzer and its caches."""
+
+    def __init__(self, arch: ArchConfig, g: Graph):
+        self.arch = arch
+        self.g = g
+        self.analyzer = ReferenceAnalyzer(arch, g)
+        self.grid = router_grid(arch)
+
+    # ------------------------------------------------------------------
+    def eval_group(self, group: LayerGroup, lms: LMS,
+                   total_batch: int) -> Tuple[GroupEval, GroupAnalysis]:
+        arch, g, tech = self.arch, self.g, self.arch.tech
+        an = self.analyzer.analyze(group, lms, total_batch)
+        bu = group.batch_unit
+        n_passes = max(1, -(-total_batch // bu))
+        depth = _pipeline_depth_ref(g, group)
+
+        # -- per-core compute time (uses intra-core utilization) -----------
+        core_time = np.zeros(arch.n_cores)
+        glb_rd = 0.0
+        glb_wr = 0.0
+        for name, regs in an.layer_parts.items():
+            lyr = g.layers[name]
+            mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
+            for core, r in regs.items():
+                rk = r.k1 - r.k0
+                hwb = max(1, r.elems // max(1, rk))
+                df = _explore_seed(rk, lyr.C, hwb, lyr.R, lyr.S,
+                                   lyr.bytes_per_elem, arch.core_glb_bytes,
+                                   arch.macs_per_core, lyr.kind)
+                macs = r.elems * mac_per_elem
+                peak = arch.macs_per_core * arch.freq_ghz * 1e9
+                core_time[core] += macs / (peak * max(df.utilization, 1e-3))
+                glb_rd += df.glb_read_bytes
+                glb_wr += df.glb_write_bytes
+
+        # -- resource times per pass ---------------------------------------
+        edge_tot = an.edge_bytes + an.edge_bytes_amortized
+        is_d2d = self.grid.edge_is_d2d
+        t_noc = float((edge_tot[~is_d2d] / (arch.noc_bw * 1e9)).max(initial=0.0))
+        t_d2d = float((edge_tot[is_d2d] / (arch.d2d_bw * 1e9)).max(initial=0.0)) \
+            if is_d2d.any() else 0.0
+        dram_port_bw = arch.dram_bw / arch.n_dram * 1e9
+        t_dram = float(((an.dram_bytes + an.dram_bytes_amortized)
+                        / dram_port_bw).max(initial=0.0))
+        t_comp = float(core_time.max(initial=0.0))
+        stage = max(t_comp, t_noc, t_d2d, t_dram, 1e-12)
+        bottleneck = ["compute", "noc", "d2d", "dram"][
+            int(np.argmax([t_comp, t_noc, t_d2d, t_dram]))]
+
+        # -- GLB overcommit: soft penalty -----------------------------------
+        over = np.maximum(an.core_glb_need - arch.core_glb_bytes, 0.0)
+        overflow = float(over.sum())
+        spill_dram = overflow * 2.0          # write + re-read per pass
+        stage *= 1.0 + overflow / (arch.core_glb_bytes * arch.n_cores)
+        t_dram_spill = spill_dram / (arch.dram_bw * 1e9)
+        stage += t_dram_spill
+
+        delay = stage * (n_passes + depth - 1)
+
+        # -- energy over the whole batch -------------------------------------
+        noc_bytes = float(edge_tot[~is_d2d].sum()) * n_passes
+        d2d_bytes = float(edge_tot[is_d2d].sum()) * n_passes
+        dram_b = float(an.dram_bytes.sum()) * n_passes \
+            + an.weight_dram_bytes_total + spill_dram * n_passes
+        macs_total = float(an.core_macs.sum()) * n_passes
+        e = {
+            "mac": macs_total * tech.e_mac,
+            "glb": (glb_rd + glb_wr + float(an.core_in_bytes.sum())) * n_passes
+                   * tech.e_glb_byte,
+            "noc": (noc_bytes + d2d_bytes) * tech.e_noc_hop_byte,
+            "d2d": d2d_bytes * tech.e_d2d_byte,
+            "dram": dram_b * tech.e_dram_byte,
+        }
+        ge = GroupEval(delay_s=delay, energy_j=sum(e.values()),
+                       stage_time_s=stage, n_passes=n_passes, depth=depth,
+                       bottleneck=bottleneck, glb_overflow_bytes=overflow,
+                       energy_breakdown=e)
+        return ge, an
+
+    # ------------------------------------------------------------------
+    def evaluate(self, mapping: Sequence[Tuple[LayerGroup, LMS]],
+                 total_batch: int) -> EvalResult:
+        groups: List[GroupEval] = []
+        analyses: List[GroupAnalysis] = []
+        for group, lms in mapping:
+            ge, an = self.eval_group(group, lms, total_batch)
+            groups.append(ge)
+            analyses.append(an)
+        return EvalResult(
+            delay_s=sum(ge.delay_s for ge in groups),
+            energy_j=sum(ge.energy_j for ge in groups),
+            groups=groups, analyses=analyses)

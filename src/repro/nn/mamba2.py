@@ -54,7 +54,11 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
     diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
     ii = jnp.arange(chunk)
     causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
-    Lmat = jnp.where(causal, jnp.exp(diff), 0.0)           # (B,nc,Qi,Qj,H)
+    # mask BEFORE the exp: non-causal entries have diff > 0 (cum is
+    # decreasing) and exp(diff) overflows to inf, which the where() would
+    # hide in the forward pass but turns 0*inf into NaN in the VJP
+    diff = jnp.where(causal, diff, -jnp.inf)
+    Lmat = jnp.exp(diff)                                   # (B,nc,Qi,Qj,H)
     # scores[b,c,i,j,g] = C_i . B_j
     scores = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)
     scores = jnp.repeat(scores, rep, axis=-1)              # -> (B,nc,Qi,Qj,H)

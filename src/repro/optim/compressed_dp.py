@@ -65,7 +65,8 @@ def make_compressed_dp_step(loss_fn, opt_update, mesh, axis: str = "data"):
     ``step(params, opt, err, batch) -> (params, opt, err, metrics)``.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from ..compat import shard_map
 
     def local_step(params, opt, err, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)

@@ -48,8 +48,12 @@ class PipelineExec:
             n_blocks = sum(1 for name in st.layers if name.endswith("_add2")
                            or name.endswith("_add") and "_add1" not in name)
             n_blocks = max(1, n_blocks)
-            self._ranges.append((count, min(count + n_blocks,
-                                            self.cfg.n_layers)))
+            # clamp BOTH ends: once earlier stages have consumed all layers,
+            # count may exceed n_layers and an unclamped lo would invert the
+            # slice (jnp.arange(hi - lo) with hi < lo)
+            lo = min(count, self.cfg.n_layers)
+            hi = min(count + n_blocks, self.cfg.n_layers)
+            self._ranges.append((lo, hi))
             count += n_blocks
         # stretch the last stage to cover any remainder
         if self._ranges:

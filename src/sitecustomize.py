@@ -1,0 +1,39 @@
+"""Process-wide compat hook, auto-imported wherever ``PYTHONPATH=src``.
+
+The ``site`` module imports ``sitecustomize`` at interpreter startup when
+one is importable, and the tier-1 test command plus every subprocess the
+tests spawn run with ``src`` on ``PYTHONPATH`` — early enough to bridge
+jax/hypothesis gaps BEFORE user code runs ``from jax import shard_map``
+(see ``_repro_bootstrap`` for the hooks; ``REPRO_NO_JAX_COMPAT=1``
+disables the jax one).
+
+Because ``src`` precedes site-packages on ``sys.path``, this file shadows
+any sitecustomize the Python distribution ships; after installing our
+hooks we locate and execute that shadowed module so its startup
+customization still runs.
+"""
+
+import os
+import sys
+
+import _repro_bootstrap
+
+_repro_bootstrap.install()
+
+# chain to a shadowed system/venv sitecustomize, if any
+_here = os.path.dirname(os.path.abspath(__file__))
+for _p in sys.path:
+    try:
+        if os.path.abspath(_p or ".") == _here:
+            continue
+        _cand = os.path.join(_p or ".", "sitecustomize.py")
+        if os.path.exists(_cand):
+            import importlib.util
+
+            _spec = importlib.util.spec_from_file_location(
+                "_shadowed_sitecustomize", _cand)
+            _mod = importlib.util.module_from_spec(_spec)
+            _spec.loader.exec_module(_mod)
+            break
+    except Exception:
+        break  # never take the interpreter down from a startup hook

@@ -1,0 +1,176 @@
+"""Vectorized/incremental evaluation engine vs the seed scalar oracle.
+
+Three layers of protection for the cost model's rewrite:
+  * the vectorized intra-core tiling search must return IDENTICAL
+    ``CoreDataflow`` results to the scalar triple-loop reference over a
+    sweep of conv/fc/depthwise/eltwise/pool/matmul signatures;
+  * ``GroupEval`` from the incremental engine must match the seed engine
+    (``repro.core.seed_reference``) bit-for-bit on full mappings, and a
+    set of golden values pinned from the seed commit guards both against
+    a correlated drift;
+  * a CachedEvaluator SA run must reproduce the uncached cost trajectory
+    exactly for a fixed seed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.evaluator import CachedEvaluator, Evaluator
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import simba_arch
+from repro.core.intra_core import (explore_intra_core,
+                                   explore_intra_core_many,
+                                   explore_intra_core_reference)
+from repro.core.sa import SAConfig, sa_optimize
+from repro.core.seed_reference import ReferenceEvaluator
+from repro.core.tangram import tangram_map
+from repro.core.workloads import resnet50, transformer
+
+
+# ---------------------------------------------------------------------------
+# intra-core: vectorized vs scalar reference
+# ---------------------------------------------------------------------------
+
+def _signature_sweep(n):
+    rng = np.random.default_rng(7)
+    kinds = ["conv", "fc", "depthwise", "eltwise", "pool", "matmul"]
+    for trial in range(n):
+        yield (int(rng.integers(1, 2048)), int(rng.integers(0, 2048)),
+               int(rng.integers(1, 8192)), int(rng.choice([1, 3, 5, 7])),
+               int(rng.choice([1, 3, 5])), int(rng.choice([1, 2, 4])),
+               int(rng.choice([64 * 1024, 512 * 1024, 2 * 1024 * 1024])),
+               int(rng.choice([256, 1024, 4096])),
+               kinds[trial % len(kinds)])
+
+
+def test_vectorized_explore_matches_scalar_reference():
+    for sig in _signature_sweep(200):
+        vec = explore_intra_core.__wrapped__(*sig)   # bypass the lru cache
+        ref = explore_intra_core_reference(*sig)
+        assert vec == ref, sig
+
+
+def test_explore_many_dedupes_and_aligns():
+    sigs = list(_signature_sweep(40))
+    batch = sigs + sigs[:10]                         # duplicates on purpose
+    out = explore_intra_core_many(batch)
+    assert len(out) == len(batch)
+    for sig, df in zip(batch, out):
+        assert df == explore_intra_core(*sig)
+    # duplicated signatures return the same (cached) object
+    for i in range(10):
+        assert out[i] is out[len(sigs) + i]
+
+
+def test_explore_tiny_and_spill_cases():
+    # degenerate dims and a GLB too small for any tile (spill fallback)
+    for sig in [(1, 1, 1, 1, 1, 1, 64, 256, "conv"),
+                (512, 512, 4096, 3, 3, 1, 16, 1024, "conv"),
+                (7, 0, 9, 1, 1, 2, 1 << 20, 1024, "fc"),
+                (16, 16, 64, 1, 1, 1, 1 << 20, 1024, "eltwise")]:
+        assert explore_intra_core.__wrapped__(*sig) == \
+            explore_intra_core_reference(*sig)
+
+
+# ---------------------------------------------------------------------------
+# GroupEval: incremental engine vs seed oracle, plus pinned goldens
+# ---------------------------------------------------------------------------
+
+def _mapped(g, batch):
+    arch = simba_arch()
+    groups = partition_graph(g, arch, batch)
+    return arch, tangram_map(groups, g, arch)
+
+
+@pytest.mark.parametrize("workload,batch", [
+    (transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s"), 8),
+    (resnet50(), 4),
+])
+def test_group_eval_bit_identical_to_seed_engine(workload, batch):
+    arch, mapping = _mapped(workload, batch)
+    ref = ReferenceEvaluator(arch, workload)
+    new = Evaluator(arch, workload)
+    for grp, lms in mapping:
+        a, _ = ref.eval_group(grp, lms, batch)
+        b, _ = new.eval_group(grp, lms, batch)
+        assert a == b                   # dataclass ==: every field, bitwise
+
+
+# golden values recorded from the seed commit's evaluator on these fixed
+# mappings — they guard ReferenceEvaluator itself against drift
+GOLD_TF = [
+    (0.000146448, 0.000122474496, 4.8816e-05, 1, 3, "d2d", 0.0),
+    (0.000106496, 8.925150080000001e-05, 2.6624e-05, 1, 4, "d2d", 0.0),
+    (6.0096e-05, 7.124474879999999e-05, 1.5024e-05, 1, 4, "d2d", 0.0),
+    (0.00012632, 8.273904e-05, 2.5264e-05, 1, 5, "d2d", 0.0),
+]
+GOLD_RN50 = {
+    0: (0.017354744, 0.0033603707104, 0.0014462286666666667, 2, 11,
+        "compute", 4669440.0),
+    16: (0.000555264, 0.000647145664, 0.000185088, 1, 3, "d2d", 0.0),
+    32: (0.000516608, 0.0010142298, 0.000516608, 1, 1, "d2d", 0.0),
+}
+
+
+def _fields(ge):
+    return (ge.delay_s, ge.energy_j, ge.stage_time_s, ge.n_passes,
+            ge.depth, ge.bottleneck, ge.glb_overflow_bytes)
+
+
+def test_golden_values_transformer():
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+    arch, mapping = _mapped(g, 8)
+    ev = Evaluator(arch, g)
+    for gi, (grp, lms) in enumerate(mapping):
+        ge, _ = ev.eval_group(grp, lms, 8)
+        assert _fields(ge) == GOLD_TF[gi]
+
+
+def test_golden_values_resnet50():
+    g = resnet50()
+    arch, mapping = _mapped(g, 4)
+    ev = Evaluator(arch, g)
+    for gi, gold in GOLD_RN50.items():
+        grp, lms = mapping[gi]
+        ge, _ = ev.eval_group(grp, lms, 4)
+        assert _fields(ge) == gold
+
+
+# ---------------------------------------------------------------------------
+# CachedEvaluator: content-addressed cache consistency
+# ---------------------------------------------------------------------------
+
+def test_cached_evaluator_reproduces_uncached_sa_trajectory():
+    arch = simba_arch()
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+    groups = partition_graph(g, arch, 8)
+    init = tangram_map(groups, g, arch)
+    cfg = SAConfig(iters=400, seed=3)
+    r_plain = sa_optimize(g, arch, groups, 8, cfg, init=init,
+                          evaluator=Evaluator(arch, g))
+    cached = CachedEvaluator(arch, g)
+    r_cached = sa_optimize(g, arch, groups, 8, cfg, init=init,
+                           evaluator=cached)
+    assert r_plain.cost == r_cached.cost
+    assert r_plain.energy_j == r_cached.energy_j
+    assert r_plain.delay_s == r_cached.delay_s
+    assert (r_plain.accepted, r_plain.proposed) == \
+        (r_cached.accepted, r_cached.proposed)
+    info = cached.cache_info()
+    assert info["hits"] > 0             # final re-eval of best mapping hits
+
+
+def test_cached_evaluator_hits_on_repeat_and_fd_independence():
+    arch = simba_arch()
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+    groups = partition_graph(g, arch, 8)
+    mapping = tangram_map(groups, g, arch)
+    ev = CachedEvaluator(arch, g)
+    r1 = ev.evaluate(mapping, 8)
+    misses = ev.cache_info()["misses"]
+    r2 = ev.evaluate(mapping, 8)
+    assert ev.cache_info()["misses"] == misses      # all hits second time
+    assert r1.delay_s == r2.delay_s and r1.energy_j == r2.energy_j
+    # a different batch is a different key
+    ev.evaluate(mapping, 16)
+    assert ev.cache_info()["misses"] > misses
