@@ -72,9 +72,10 @@ def _objective_sweep() -> List[Dict]:
         cfg = DSEConfig(alpha=a, beta=b, gamma=c, batch=64,
                         sa=SAConfig(iters=800, seed=0))
         from repro.core.dse import run_dse
-        screen = run_dse(cands, workloads, cfg, use_sa=False)
-        refined = run_dse([p.arch for p in screen[:6]], workloads, cfg,
-                          use_sa=True)
+        # engine screening: seeds stay tied to the original candidate
+        # index, so a reordered screen can't shift which seed an arch gets
+        refined = run_dse(cands, workloads, cfg, use_sa=True,
+                          screen_keep=6 / len(cands))
         best = refined[0]
         rows.append({"objective": name, "arch": best.arch.label(),
                      "chiplets": best.arch.n_chiplets,

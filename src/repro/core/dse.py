@@ -11,16 +11,21 @@ from __future__ import annotations
 
 import itertools
 import math
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
-from .evaluator import CachedEvaluator
+from .evaluator import evaluator_for
 from .graph_partition import partition_graph
 from .hw import ArchConfig, TECH_12NM
 from .mc import evaluate_mc
 from .sa import Mapping, SAConfig, SAResult, sa_optimize
 from .tangram import tangram_map
 from .workload import Graph
+
+# module object (not names): explore imports this module back, so names may
+# not exist yet at import time — attributes resolve at call time instead
+from . import explore as _explore
 
 
 @dataclass
@@ -84,17 +89,28 @@ def grid_candidates(tops: float,
 
 
 def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
-                       cfg: DSEConfig, use_sa: bool = True) -> DSEPoint:
+                       cfg: DSEConfig, use_sa: bool = True,
+                       seed: Optional[int] = None) -> DSEPoint:
+    """Score one architecture over all workloads.
+
+    ``seed`` overrides ``cfg.sa.seed`` for this candidate's SA chains; the
+    engine passes a per-candidate seed derived from the candidate index so
+    serial and parallel sweeps are bit-identical.
+    """
+    sa_cfg = cfg.sa if seed is None else replace(cfg.sa, seed=seed)
     mc = evaluate_mc(arch).total
     logE = logD = 0.0
     per: Dict[str, Tuple[float, float]] = {}
     maps: Dict[str, Mapping] = {}
     for name, g in workloads.items():
         groups = partition_graph(g, arch, cfg.batch)
-        # cached: multi-chain SA and the T-Map screening re-hit group evals
-        ev = CachedEvaluator(arch, g)
+        # per-process LRU registry: re-scoring this (arch, graph) soon after
+        # (small screen-then-refine sweeps, same-arch loops) reuses the
+        # analyzer + GroupEval cache; within this call, SA chains and the
+        # final exact re-evaluation share ev by argument passing
+        ev = evaluator_for(arch, g)
         if use_sa:
-            res = sa_optimize(g, arch, groups, cfg.batch, cfg.sa, evaluator=ev)
+            res = sa_optimize(g, arch, groups, cfg.batch, sa_cfg, evaluator=ev)
             E, D, mapping = res.energy_j, res.delay_s, res.mapping
         else:
             mapping = tangram_map(groups, g, arch)
@@ -114,47 +130,61 @@ def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
 
 
 def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
-            cfg: DSEConfig, use_sa: bool = True,
-            progress: bool = False) -> List[DSEPoint]:
-    points: List[DSEPoint] = []
-    for i, arch in enumerate(candidates):
-        pt = evaluate_candidate(arch, workloads, cfg, use_sa=use_sa)
-        points.append(pt)
-        if progress:
-            print(f"[dse {i + 1}/{len(candidates)}] {arch.label()} "
-                  f"MC=${pt.mc:.0f} E={pt.energy_j:.3e}J D={pt.delay_s:.3e}s "
-                  f"obj={pt.objective:.3e}", flush=True)
-    points.sort(key=lambda p: p.objective)
-    return points
+            cfg: DSEConfig, use_sa: bool = True, progress: bool = False,
+            n_workers: int = 1, screen_keep: float = 1.0,
+            checkpoint: Union[str, Path, None] = None,
+            mp_context: str = "spawn") -> List[DSEPoint]:
+    """Sweep ``candidates``; thin wrapper over the exploration engine.
+
+    * ``n_workers > 1`` fans candidates out over worker processes; results
+      are bit-identical to the serial path (per-candidate seeds derive from
+      the candidate index, not from scheduling).
+    * ``screen_keep < 1.0`` first scores every candidate with the cheap
+      T-Map pass and runs full SA only on the best fraction.
+    * ``checkpoint`` names a JSON-lines file: completed candidates are
+      skipped on re-run (resume after a crash / interrupted sweep).
+    """
+    with _explore.ExplorationEngine(workloads, cfg, n_workers=n_workers,
+                                    checkpoint=checkpoint, progress=progress,
+                                    mp_context=mp_context) as eng:
+        return eng.run(candidates, use_sa=use_sa, screen_keep=screen_keep)
+
+
+def scaled_arch(base: ArchConfig, s: int) -> ArchConfig:
+    """Tile ``s`` copies of a base chiplet in an as-square-as-possible grid."""
+    sx = int(math.isqrt(s))
+    while s % sx:
+        sx -= 1
+    sy = s // sx
+    return base.replace(
+        x_cores=base.x_cores * sx, y_cores=base.y_cores * sy,
+        xcut=base.xcut * sx, ycut=base.ycut * sy,
+        dram_bw=base.dram_bw * s)
 
 
 def joint_reuse_dse(chiplet_grid: Sequence[ArchConfig],
                     scale_factors: Sequence[int],
                     workloads: Dict[str, Graph],
-                    cfg: DSEConfig) -> List[Tuple[ArchConfig, float]]:
+                    cfg: DSEConfig,
+                    n_workers: int = 1) -> List[Tuple[ArchConfig, float]]:
     """Paper Sec. VII-B: pick ONE chiplet; build each scale by tiling it.
 
     ``chiplet_grid`` holds base (single-chiplet) configs; ``scale_factors``
     multiplies the chiplet count (e.g. (1, 4) for 128/512 TOPs).  Returns
-    (base_arch, product-of-objectives) sorted ascending.
+    (base_arch, product-of-objectives) sorted ascending.  The flattened
+    (base x scale) grid is evaluated through the engine, so ``n_workers``
+    parallelizes it with the same determinism guarantee as ``run_dse``.
     """
+    scales = list(scale_factors)
+    flat = [scaled_arch(base, s) for base in chiplet_grid for s in scales]
+    with _explore.ExplorationEngine(workloads, cfg,
+                                    n_workers=n_workers) as eng:
+        pts = eng.map_archs(flat, use_sa=True)
     out: List[Tuple[ArchConfig, float]] = []
-    for base in chiplet_grid:
+    for bi, base in enumerate(chiplet_grid):
         prod = 1.0
-        ok = True
-        for s in scale_factors:
-            # tile s chiplets in as-square-as-possible grid
-            sx = int(math.isqrt(s))
-            while s % sx:
-                sx -= 1
-            sy = s // sx
-            arch = base.replace(
-                x_cores=base.x_cores * sx, y_cores=base.y_cores * sy,
-                xcut=base.xcut * sx, ycut=base.ycut * sy,
-                dram_bw=base.dram_bw * s)
-            pt = evaluate_candidate(arch, workloads, cfg)
-            prod *= pt.objective
-        if ok:
-            out.append((base, prod))
+        for si in range(len(scales)):
+            prod *= pts[bi * len(scales) + si].objective
+        out.append((base, prod))
     out.sort(key=lambda t: t[1])
     return out

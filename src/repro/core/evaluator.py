@@ -214,3 +214,47 @@ class CachedEvaluator(Evaluator):
     def cache_info(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "size": len(self._cache)}
+
+
+# ---------------------------------------------------------------------------
+# Per-process evaluator registry
+# ---------------------------------------------------------------------------
+
+# (ArchConfig, id(graph)) -> CachedEvaluator.  Each entry holds its Graph
+# strongly (Evaluator.g), so a live entry's id() can never be recycled; the
+# key is only ever compared while the entry is alive.
+_REGISTRY: "OrderedDict[Tuple[ArchConfig, int], CachedEvaluator]" \
+    = OrderedDict()
+_REGISTRY_MAX = 8
+
+
+def evaluator_for(arch: ArchConfig, g: Graph,
+                  maxsize: int = 20_000) -> CachedEvaluator:
+    """Process-local LRU registry of :class:`CachedEvaluator` instances.
+
+    Scope is deliberately narrow: a hit needs the same ``(arch, graph)``
+    re-scored within the last ``_REGISTRY_MAX`` distinct architectures —
+    the screen-then-refine flow of *small* sweeps (demo grids, tests, the
+    CI smoke) and tight same-arch loops.  Large sweeps (table1's hundreds
+    of candidates) evict entries long before the refinement stage returns
+    to them and simply pay one evaluator build per candidate, as before
+    this registry existed; sharing *within* one candidate (replica-exchange
+    chains + the final exact re-evaluation) is by explicit argument passing
+    in ``evaluate_candidate``/``sa_optimize``, not via this registry.
+    Retention is bounded: at most ``_REGISTRY_MAX`` evaluators, each
+    holding only the GroupEvals it actually computed (a few MB per typical
+    candidate).  Reuse is pure memoization: values are identical whether or
+    not an entry was found (DESIGN.md), so parallel-vs-serial determinism
+    is unaffected.  Worker processes each have their own registry;
+    evaluators are never shared across processes.
+    """
+    key = (arch, id(g))
+    ev = _REGISTRY.get(key)
+    if ev is None:
+        ev = CachedEvaluator(arch, g, maxsize=maxsize)
+        _REGISTRY[key] = ev
+        if len(_REGISTRY) > _REGISTRY_MAX:
+            _REGISTRY.popitem(last=False)
+    else:
+        _REGISTRY.move_to_end(key)
+    return ev

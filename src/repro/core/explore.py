@@ -1,0 +1,579 @@
+"""Unified parallel exploration engine (DSE + SA orchestration layer).
+
+The outer search loops — Table-I architecture enumeration and the per-
+candidate SA mapping runs — dominate Gemini's co-exploration wall time, not
+the cost model.  This module owns everything *around* a candidate
+evaluation:
+
+* **Parallel DSE** — :class:`ExplorationEngine` fans candidates out over a
+  ``ProcessPoolExecutor``.  Workload graphs and the ``DSEConfig`` are
+  pickled once per worker (pool initializer); each worker then builds its
+  own per-candidate ``CachedEvaluator`` (the GroupEval cache is pure
+  memoization, so cache state never changes values — see DESIGN.md).
+  Per-candidate SA seeds derive deterministically from
+  ``(cfg.sa.seed, candidate index)``, so ``n_workers=1`` and
+  ``n_workers=8`` produce bit-identical ``DSEPoint`` lists.
+* **Two-stage screening** — a cheap T-Map pass (``tangram_map``, no SA)
+  scores every candidate; only the top ``screen_keep`` fraction proceeds
+  to full SA.  ``screen_keep=1.0`` (default) reproduces the exhaustive
+  behavior exactly; the pruned count is logged.
+* **Replica-exchange SA** — :func:`replica_exchange_sa` runs
+  ``cfg.n_chains`` chains on a geometric temperature ladder with periodic
+  Metropolis swaps of adjacent chains' states, all sharing one
+  content-addressed evaluator cache.  ``sa_optimize`` dispatches here for
+  ``n_chains > 1``.
+* **Sweep artifacts** — :class:`ResumableSweep` (append-only JSON-lines
+  checkpoint, skip-on-resume, crash-tolerant) and
+  :func:`pareto_frontier` over (MC, E, D).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .evaluator import CachedEvaluator, Evaluator
+from .hw import TECH_12NM, ArchConfig
+from .sa import (Mapping, SAChain, SAConfig, SAResult, group_draw_cdf)
+from .workload import Graph, LayerGroup
+
+# resolved lazily through the module so tests can monkeypatch
+# dse.evaluate_candidate and observe the engine's serial path
+from . import dse as _dse
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-candidate seeds
+# ---------------------------------------------------------------------------
+
+def derive_seed(base_seed: int, index: int) -> int:
+    """Deterministic per-candidate SA seed from ``(base seed, index)``.
+
+    Routed through ``np.random.SeedSequence`` so neighbouring indices give
+    statistically independent streams (``base_seed + index`` would make
+    candidate ``i``'s chain 1 collide with candidate ``i+1``'s chain 0).
+    Independent of worker count / scheduling by construction.
+    """
+    ss = np.random.SeedSequence([abs(int(base_seed)), int(index)])
+    return int(ss.generate_state(1, np.uint32)[0])
+
+
+# ---------------------------------------------------------------------------
+# Replica-exchange SA (parallel tempering)
+# ---------------------------------------------------------------------------
+
+def replica_exchange_sa(g: Graph, arch: ArchConfig,
+                        groups: Sequence[LayerGroup], total_batch: int,
+                        cfg: SAConfig, init: Optional[Mapping] = None,
+                        evaluator: Optional[Evaluator] = None) -> SAResult:
+    """Parallel tempering over ``cfg.n_chains`` chains (paper Sec. V-B1 SA,
+    upgraded from independent restarts).
+
+    Chain 0 is an **unswapped reference chain**: same seed and cooling
+    schedule as the single-chain engine and excluded from state exchanges,
+    so its trajectory — and therefore its best — is bit-identical to
+    ``n_chains=1``.  The returned global best can consequently never be
+    worse than the single-chain result on the same seed (elitism), which
+    turns the satellite invariant into a structural guarantee rather than
+    a per-seed accident.
+
+    Chains ``1..N-1`` form the tempering ladder: chain ``k`` anneals at
+    ``t_ladder**(k-1)`` times the base temperature, and every
+    ``swap_every`` iterations adjacent ladder chains attempt a Metropolis
+    state swap ``P = min(1, exp((1/T_a - 1/T_b) * (cost_a - cost_b)))``,
+    so good configurations found by hot (exploratory) chains percolate
+    down while locally-refined cold states heat up to escape minima.  All
+    chains share one content-addressed evaluator cache, so a state
+    re-visited by any chain is never re-analyzed.  Chain ``k`` is seeded
+    ``cfg.seed + k``; the best mapping over all chains is re-evaluated
+    exactly.
+
+    Note ``n_chains=2`` has a one-chain ladder and therefore no swaps —
+    it degenerates to two independent seeds plus elitism (the pre-refactor
+    restart behavior).  Tempering proper needs ``n_chains >= 3``.
+    """
+    ev = evaluator or CachedEvaluator(arch, g)
+    cum_w = group_draw_cdf(groups, arch.n_cores)
+    chains = [SAChain(g, arch, groups, total_batch, cfg, init, ev,
+                      seed=cfg.seed + k, cum_w=cum_w,
+                      t_scale=1.0 if k == 0 else cfg.t_ladder ** (k - 1))
+              for k in range(cfg.n_chains)]
+    ladder = chains[1:]
+    swap_rng = np.random.default_rng(
+        np.random.SeedSequence([abs(int(cfg.seed)), 0x52455853]))  # "REXS"
+    swap_every = max(1, cfg.swap_every)
+    history: List[float] = []
+    for it in range(cfg.iters):
+        for chain in chains:
+            chain.step()
+        if (it + 1) % swap_every == 0:
+            for k in range(len(ladder) - 1):
+                cold, hot = ladder[k], ladder[k + 1]
+                t_cold = max(cold.T, 1e-30)
+                t_hot = max(hot.T, 1e-30)
+                delta = (1.0 / t_cold - 1.0 / t_hot) * (cold.cost - hot.cost)
+                if delta >= 0 or swap_rng.random() < math.exp(max(delta, -700.0)):
+                    cold.exchange_state(hot)
+        if cfg.log_every and it % cfg.log_every == 0:
+            history.append(chains[0].cost)      # reference-chain trace
+    # pick the winner by *exact* re-evaluated cost (incremental best_cost
+    # carries float accumulation error); ties prefer the reference chain,
+    # keeping the never-worse-than-single-chain guarantee airtight
+    finals = [c.finalize([]) for c in chains]
+    res = min(finals, key=lambda r: r.cost)
+    res.history = history
+    res.accepted = sum(c.accepted for c in chains)
+    res.proposed = sum(c.proposed for c in chains)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# DSEPoint / ArchConfig <-> JSON (checkpoint records)
+# ---------------------------------------------------------------------------
+
+_TECHS = {TECH_12NM.name: TECH_12NM}
+
+_ARCH_FIELDS = ("x_cores", "y_cores", "xcut", "ycut", "noc_bw", "d2d_bw",
+                "dram_bw", "glb_kb", "macs_per_core", "freq_ghz", "n_dram")
+
+
+def register_tech(tech) -> None:
+    """Make a non-default :class:`Tech` resumable from checkpoints (archs
+    serialize their tech by name; deserialization refuses unknown names
+    rather than silently substituting the wrong constants)."""
+    _TECHS[tech.name] = tech
+
+
+def arch_to_dict(arch: ArchConfig) -> Dict[str, Any]:
+    d = {f: getattr(arch, f) for f in _ARCH_FIELDS}
+    d["tech"] = arch.tech.name
+    return d
+
+
+def arch_from_dict(d: Dict[str, Any]) -> ArchConfig:
+    kw = {f: d[f] for f in _ARCH_FIELDS}
+    tech_name = d.get("tech", "")
+    tech = _TECHS.get(tech_name)
+    if tech is None:
+        raise ValueError(
+            f"unknown tech {tech_name!r} in checkpoint record; call "
+            f"explore.register_tech() for non-default technologies")
+    return ArchConfig(**kw, tech=tech)
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Stable content digest of a workload DAG (layers, edges, inputs).
+
+    ``Layer`` is a frozen dataclass, so its ``repr`` enumerates every
+    field; two graphs with equal structure hash equally regardless of
+    insertion order.
+    """
+    import hashlib
+    h = hashlib.sha1()
+    for name in sorted(g.layers):
+        h.update(repr((name, g.layers[name])).encode())
+    h.update(repr(sorted(g.edges)).encode())
+    h.update(repr(sorted(g.input_layers)).encode())
+    return h.hexdigest()[:12]
+
+
+def candidate_key(arch: ArchConfig) -> str:
+    """Stable content identity of a candidate (checkpoint skip key)."""
+    d = arch_to_dict(arch)
+    return "/".join(f"{f}={d[f]:g}" if isinstance(d[f], float) else
+                    f"{f}={d[f]}" for f in (*_ARCH_FIELDS, "tech"))
+
+
+def point_to_dict(pt: "_dse.DSEPoint") -> Dict[str, Any]:
+    return {"arch": arch_to_dict(pt.arch), "mc": pt.mc,
+            "energy_j": pt.energy_j, "delay_s": pt.delay_s,
+            "objective": pt.objective,
+            "per_workload": {k: list(v) for k, v in pt.per_workload.items()}}
+
+
+def point_from_dict(d: Dict[str, Any]) -> "_dse.DSEPoint":
+    # mappings are not serialized: a resumed point carries metrics only
+    return _dse.DSEPoint(
+        arch=arch_from_dict(d["arch"]), mc=d["mc"], energy_j=d["energy_j"],
+        delay_s=d["delay_s"], objective=d["objective"],
+        per_workload={k: (v[0], v[1]) for k, v in d["per_workload"].items()})
+
+
+# ---------------------------------------------------------------------------
+# Resumable sweeps (JSON-lines checkpoint)
+# ---------------------------------------------------------------------------
+
+class ResumableSweep:
+    """Append-only JSON-lines checkpoint for long sweeps.
+
+    One ``{"_key": ..., **record}`` object per line; an optional first line
+    ``{"_config": fingerprint}`` guards against resuming under a changed
+    configuration (mismatch discards the stale file).  A truncated trailing
+    line (process killed mid-write) is tolerated and dropped.  Duplicate
+    keys are last-wins, so a forced re-run simply appends an overriding
+    record.  Used by ``run_dse(..., checkpoint=...)`` and by the hillclimb
+    driver (``launch/hillclimb.py``).
+    """
+
+    def __init__(self, path: Union[str, Path],
+                 config_fingerprint: Optional[str] = None,
+                 resume: bool = True):
+        self.path = Path(path)
+        self.fingerprint = config_fingerprint
+        self._records: Dict[str, Dict[str, Any]] = {}
+        fresh = True
+        if self.path.exists():
+            if resume:
+                fresh = not self._load(readonly=False)
+            if fresh:
+                self._set_aside()
+        if fresh:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            header = (json.dumps({"_config": self.fingerprint}) + "\n"
+                      if self.fingerprint is not None else "")
+            self.path.write_text(header)
+
+    def _set_aside(self) -> None:
+        """Move a rejected file (corrupt line / changed config /
+        ``resume=False``) to a fresh ``.bakN`` name — recorded data is
+        never destroyed, and existing backups are never clobbered."""
+        n = 0
+        while True:
+            suffix = ".bak" if n == 0 else f".bak{n}"
+            bak = self.path.with_name(self.path.name + suffix)
+            if not bak.exists():
+                break
+            n += 1
+        self.path.replace(bak)
+        print(f"[sweep] previous file kept at {bak}")
+
+    @classmethod
+    def read(cls, path: Union[str, Path]) -> "ResumableSweep":
+        """Read-only parse: never creates, repairs or resets the file.
+
+        For consumers that only render recorded sweeps (``launch/report``);
+        a corrupt or config-mismatched file yields whatever records parse
+        instead of triggering the constructor's set-aside logic.
+        """
+        inst = cls.__new__(cls)
+        inst.path = Path(path)
+        inst.fingerprint = None
+        inst._records = {}
+        if inst.path.exists():
+            inst._load(readonly=True)
+        return inst
+
+    def _load(self, readonly: bool) -> bool:
+        """Parse the existing file; False if it must be discarded."""
+        text = self.path.read_text()
+        lines = text.splitlines()
+        valid: List[str] = []
+        saw_header = False
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    continue                  # truncated final line: drop it
+                print(f"[sweep] {self.path}: corrupt line {i + 1}; "
+                      "discarding checkpoint")
+                if readonly:
+                    continue                  # salvage what parses
+                self._records.clear()        # discard means ALL records
+                return False
+            if "_config" in rec:
+                if self.fingerprint is not None \
+                        and rec["_config"] != self.fingerprint:
+                    print(f"[sweep] {self.path}: config changed; "
+                          "discarding checkpoint")
+                    return False
+                saw_header = True
+                valid.append(line)
+                continue
+            valid.append(line)
+            key = rec.pop("_key", None)
+            if key is not None:
+                self._records[key] = rec
+        if not readonly and self.fingerprint is not None and not saw_header \
+                and self._records:
+            # a fingerprinted sweep whose header is gone (e.g. killed while
+            # writing it) can no longer prove the records match this config
+            print(f"[sweep] {self.path}: missing config header; "
+                  "discarding checkpoint")
+            self._records.clear()
+            return False
+        # a killed-mid-write trailing fragment (or missing final newline)
+        # would merge with the next append — repair the file first;
+        # atomically (temp + replace), so a second kill mid-repair cannot
+        # lose the already-recorded lines
+        repaired = "".join(v + "\n" for v in valid)
+        if not readonly and repaired != text:
+            tmp = self.path.with_name(self.path.name + ".tmp")
+            tmp.write_text(repaired)
+            tmp.replace(self.path)
+        return True
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._records
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        return self._records.get(key)
+
+    def add(self, key: str, record: Dict[str, Any]) -> None:
+        self._records[key] = record
+        with self.path.open("a") as f:
+            f.write(json.dumps({"_key": key, **record}, default=float) + "\n")
+            f.flush()
+
+    def as_dict(self) -> Dict[str, Dict[str, Any]]:
+        return dict(self._records)
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier over (MC, E, D)
+# ---------------------------------------------------------------------------
+
+def pareto_frontier(points: Sequence["_dse.DSEPoint"],
+                    keys: Tuple[str, ...] = ("mc", "energy_j", "delay_s"),
+                    ) -> List["_dse.DSEPoint"]:
+    """Non-dominated subset under element-wise minimization of ``keys``.
+
+    A point is dominated if some other point is <= on every key and < on at
+    least one.  Ties (identical key vectors) are all kept.  Returned sorted
+    by scalar objective, best first.
+    """
+    vals = [tuple(getattr(p, k) for k in keys) for p in points]
+    out: List["_dse.DSEPoint"] = []
+    for i, p in enumerate(points):
+        vi = vals[i]
+        dominated = any(
+            all(a <= b for a, b in zip(vj, vi)) and vj != vi
+            for j, vj in enumerate(vals) if j != i)
+        if not dominated:
+            out.append(p)
+    out.sort(key=lambda p: p.objective)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Worker-process plumbing
+# ---------------------------------------------------------------------------
+
+# populated once per worker by the pool initializer; workloads + cfg are
+# pickled exactly once per worker instead of once per task
+_WORKER_STATE: Dict[str, Any] = {}
+
+
+def _worker_init(workloads: Dict[str, Graph], cfg: "_dse.DSEConfig") -> None:
+    _WORKER_STATE["workloads"] = workloads
+    _WORKER_STATE["cfg"] = cfg
+
+
+def _worker_eval(task: Tuple[int, ArchConfig, int, bool]
+                 ) -> Tuple[int, "_dse.DSEPoint"]:
+    index, arch, seed, use_sa = task
+    pt = _dse.evaluate_candidate(arch, _WORKER_STATE["workloads"],
+                                 _WORKER_STATE["cfg"], use_sa=use_sa,
+                                 seed=seed)
+    return index, pt
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class ExplorationEngine:
+    """Screened, parallel, resumable candidate evaluation.
+
+    One engine instance owns (at most) one worker pool; ``screen()`` and
+    ``run()`` share it, so the per-worker import + unpickle cost is paid
+    once per sweep.  Use as a context manager (or call :meth:`close`).
+
+    ``mp_context`` defaults to ``"spawn"``: the parent process may hold JAX
+    thread pools (fork-unsafe), and spawned workers import only the NumPy
+    cost-model stack.
+    """
+
+    def __init__(self, workloads: Dict[str, Graph], cfg: "_dse.DSEConfig",
+                 n_workers: int = 1, checkpoint: Union[str, Path, None] = None,
+                 progress: bool = False, mp_context: str = "spawn"):
+        self.workloads = dict(workloads)
+        self.cfg = cfg
+        self.n_workers = max(1, int(n_workers))
+        self.checkpoint = checkpoint
+        self.progress = progress
+        self.mp_context = mp_context
+        self._pool: Optional[ProcessPoolExecutor] = None
+        # screening scores of the last run() that screened (sorted best
+        # first); lets callers report the screen stage without re-running it
+        self.last_screen: Optional[List["_dse.DSEPoint"]] = None
+
+    # -- lifecycle -----------------------------------------------------
+    def __enter__(self) -> "ExplorationEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._pool is not None:
+            # queued-but-unstarted work is pointless once we're exiting
+            # (normally the queue is already drained; after a worker error
+            # it isn't, and waiting for it would stall the traceback)
+            self._pool.shutdown(cancel_futures=True)
+            self._pool = None
+
+    def _get_pool(self) -> ProcessPoolExecutor:
+        if self._pool is None:
+            import multiprocessing as mp
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.n_workers,
+                mp_context=mp.get_context(self.mp_context),
+                initializer=_worker_init,
+                initargs=(self.workloads, self.cfg))
+        return self._pool
+
+    # -- fingerprint for checkpoint compatibility ----------------------
+    def _fingerprint(self, use_sa: bool) -> str:
+        c = self.cfg
+        # workloads hash by *content*, not name: editing a graph while
+        # keeping its dict key must invalidate the checkpoint
+        wl = ",".join(f"{n}:{graph_fingerprint(g)}"
+                      for n, g in sorted(self.workloads.items()))
+        return (f"dse:v1:a{c.alpha:g}:b{c.beta:g}:g{c.gamma:g}:B{c.batch}:"
+                f"sa({c.sa.iters},{c.sa.t0:g},{c.sa.t_end:g},{c.sa.seed},"
+                f"{c.sa.beta:g},{c.sa.gamma:g},{c.sa.n_chains},"
+                f"{c.sa.swap_every},{c.sa.t_ladder:g}):sa={int(use_sa)}:"
+                f"wl={wl}")
+
+    # -- evaluation fan-out --------------------------------------------
+    def _map(self, tasks: List[Tuple[int, ArchConfig, int]], use_sa: bool,
+             checkpoint: Union[str, Path, None], stage: str,
+             ) -> List["_dse.DSEPoint"]:
+        """Evaluate ``(index, arch, seed)`` tasks; returns points in task
+        order regardless of completion order (determinism)."""
+        results: Dict[int, "_dse.DSEPoint"] = {}
+        sweep: Optional[ResumableSweep] = None
+        if checkpoint is not None:
+            sweep = ResumableSweep(checkpoint, self._fingerprint(use_sa))
+            for idx, arch, seed in tasks:
+                rec = sweep.get(candidate_key(arch))
+                # a record is only valid for the seed this sweep would use:
+                # editing the candidate grid shifts indices (and therefore
+                # derived seeds), and those candidates must recompute or
+                # resume would silently mix seeds (SA-less records are
+                # seed-independent)
+                if rec is not None and (not use_sa
+                                        or rec.get("seed") == seed):
+                    try:
+                        results[idx] = point_from_dict(rec)
+                    except (KeyError, ValueError, TypeError) as e:
+                        print(f"[{stage}] checkpoint record for "
+                              f"{arch.label()} unusable ({e}); recomputing")
+            if results:
+                if self.cfg.keep_mappings:
+                    print(f"[{stage}] note: {len(results)} resumed points "
+                          "carry metrics only (mappings are not checkpointed)")
+                if self.progress:
+                    print(f"[{stage}] resumed {len(results)}/{len(tasks)} "
+                          f"candidates from {sweep.path}", flush=True)
+        pending = [t for t in tasks if t[0] not in results]
+        done_n = len(results)
+
+        seed_of = {idx: seed for idx, _arch, seed in tasks}
+
+        def _record(idx: int, arch: ArchConfig, pt: "_dse.DSEPoint") -> None:
+            nonlocal done_n
+            results[idx] = pt
+            done_n += 1
+            if sweep is not None:
+                sweep.add(candidate_key(arch),
+                          {"seed": seed_of[idx], **point_to_dict(pt)})
+            if self.progress:
+                print(f"[{stage} {done_n}/{len(tasks)}] {arch.label()} "
+                      f"MC=${pt.mc:.0f} E={pt.energy_j:.3e}J "
+                      f"D={pt.delay_s:.3e}s obj={pt.objective:.3e}",
+                      flush=True)
+
+        if self.n_workers <= 1 or len(pending) <= 1:
+            for idx, arch, seed in pending:
+                pt = _dse.evaluate_candidate(arch, self.workloads, self.cfg,
+                                             use_sa=use_sa, seed=seed)
+                _record(idx, arch, pt)
+        else:
+            pool = self._get_pool()
+            futs = {pool.submit(_worker_eval, (idx, arch, seed, use_sa)):
+                    (idx, arch) for idx, arch, seed in pending}
+            not_done = set(futs)
+            try:
+                while not_done:
+                    done, not_done = wait(not_done,
+                                          return_when=FIRST_COMPLETED)
+                    for fut in done:
+                        idx, pt = fut.result()
+                        _record(idx, futs[fut][1], pt)
+            except BaseException:
+                # surface the failure now, not after the queue drains
+                for fut in not_done:
+                    fut.cancel()
+                raise
+        return [results[idx] for idx, _arch, _seed in tasks]
+
+    # -- public API ----------------------------------------------------
+    def map_archs(self, archs: Sequence[ArchConfig], use_sa: bool = True,
+                  ) -> List["_dse.DSEPoint"]:
+        """Evaluate ``archs`` (parallel, deterministic), *preserving input
+        order* — for callers that reduce positionally (``joint_reuse_dse``)
+        rather than rank by objective."""
+        tasks = [(i, arch, derive_seed(self.cfg.sa.seed, i))
+                 for i, arch in enumerate(archs)]
+        return self._map(tasks, use_sa=use_sa, checkpoint=self.checkpoint,
+                         stage="map")
+
+    def screen(self, candidates: Sequence[ArchConfig]
+               ) -> List["_dse.DSEPoint"]:
+        """T-Map-only scoring pass (no SA), sorted best-objective first."""
+        tasks = [(i, arch, derive_seed(self.cfg.sa.seed, i))
+                 for i, arch in enumerate(candidates)]
+        pts = self._map(tasks, use_sa=False, checkpoint=None, stage="screen")
+        return sorted(pts, key=lambda p: p.objective)
+
+    def run(self, candidates: Sequence[ArchConfig], use_sa: bool = True,
+            screen_keep: float = 1.0) -> List["_dse.DSEPoint"]:
+        """Full sweep: optional screening stage, then (parallel) evaluation.
+
+        Per-candidate seeds derive from the candidate's index in
+        ``candidates``, so results are independent of ``n_workers``,
+        completion order, screening of *other* candidates, and resume.
+        """
+        candidates = list(candidates)
+        tasks = [(i, arch, derive_seed(self.cfg.sa.seed, i))
+                 for i, arch in enumerate(candidates)]
+        self.last_screen = None
+        if use_sa and screen_keep < 1.0 and len(candidates) > 1:
+            screen_pts = self._map(tasks, use_sa=False, checkpoint=None,
+                                   stage="screen")
+            order = sorted(range(len(tasks)),
+                           key=lambda i: screen_pts[i].objective)
+            # epsilon guard: fraction-derived keeps like 6/n can float up
+            # (6/187*187 == 6.000000000000001) and must not round to 7
+            keep = max(1, min(len(tasks),
+                              math.ceil(screen_keep * len(tasks) - 1e-9)))
+            kept = sorted(order[:keep])
+            print(f"[explore] screening kept {keep}/{len(tasks)} candidates "
+                  f"(pruned {len(tasks) - keep})", flush=True)
+            self.last_screen = [screen_pts[i] for i in order]
+            tasks = [tasks[i] for i in kept]
+        pts = self._map(tasks, use_sa=use_sa, checkpoint=self.checkpoint,
+                        stage="dse")
+        return sorted(pts, key=lambda p: p.objective)

@@ -43,8 +43,11 @@ class SAConfig:
     seed: int = 0
     beta: float = 1.0             # energy exponent in the objective
     gamma: float = 1.0            # delay exponent
-    n_chains: int = 1
+    n_chains: int = 1             # >1 = replica exchange (core/explore.py)
     log_every: int = 0            # 0 = silent
+    # replica-exchange knobs (used only when n_chains > 1)
+    swap_every: int = 50          # iterations between adjacent-chain swaps
+    t_ladder: float = 3.0         # temperature ratio between adjacent chains
 
 
 @dataclass
@@ -64,7 +67,6 @@ def _group_weights(groups: Sequence[LayerGroup], n_cores: int) -> np.ndarray:
         n = len(grp.names)
         try:
             # log of the paper's lower bound, via lgamma to stay in float
-            total = 0.0
             from math import comb, lgamma
             s = 0
             for i in range(n):
@@ -203,63 +205,65 @@ class _Op:
         return LMS(ms=new)
 
 
-def sa_optimize(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
-                total_batch: int, cfg: SAConfig,
-                init: Optional[Mapping] = None,
-                evaluator: Optional[Evaluator] = None) -> SAResult:
-    """Run the SA chain(s); returns the best mapping found."""
-    best: Optional[SAResult] = None
-    for chain in range(cfg.n_chains):
-        res = _sa_chain(g, arch, groups, total_batch,
-                        replace(cfg, seed=cfg.seed + chain), init, evaluator)
-        if best is None or res.cost < best.cost:
-            best = res
-    assert best is not None
-    return best
+def group_draw_cdf(groups: Sequence[LayerGroup], n_cores: int) -> np.ndarray:
+    """Cumulative group-pick distribution shared by all chains of one run.
 
-
-def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
-              total_batch: int, cfg: SAConfig, init: Optional[Mapping],
-              evaluator: Optional[Evaluator]) -> SAResult:
-    rng = np.random.default_rng(cfg.seed)
-    # content-addressed GroupEval cache: re-proposals, repeated chains and
-    # the final exact re-evaluation hit it; results are identical either way
-    ev = evaluator or CachedEvaluator(arch, g)
-    mapping: Mapping = [(grp, lms) for grp, lms in
-                        (init if init is not None else tangram_map(groups, g, arch))]
-    # idle cores per group
-    idle: List[List[int]] = []
-    for grp, lms in mapping:
-        used = set(lms.cores_used())
-        idle.append([c for c in range(arch.n_cores) if c not in used])
-
-    evals: List[GroupEval] = []
-    for grp, lms in mapping:
-        ge, _ = ev.eval_group(grp, lms, total_batch)
-        evals.append(ge)
-
-    def total_cost() -> Tuple[float, float, float]:
-        E = sum(e.energy_j for e in evals)
-        D = sum(e.delay_s for e in evals)
-        return (E ** cfg.beta) * (D ** cfg.gamma), E, D
-
-    cost, E, D = total_cost()
-    best_cost, best_map = cost, [(grp, lms) for grp, lms in mapping]
-    weights = _group_weights(groups, arch.n_cores)
-    # inverse-CDF group draw: rng.choice(..., p=weights) re-normalizes and
-    # allocates on every call
-    cum_w = np.cumsum(weights)
+    Inverse-CDF group draw: ``rng.choice(..., p=weights)`` re-normalizes and
+    allocates on every call, so chains draw via ``np.searchsorted`` instead.
+    """
+    cum_w = np.cumsum(_group_weights(groups, n_cores))
     cum_w[-1] = 1.0
-    ops = _Op(g, arch, rng)
-    t0 = cfg.t0 * cost
-    alpha = (cfg.t_end / cfg.t0) ** (1.0 / max(1, cfg.iters))
-    T = t0
-    history: List[float] = []
-    accepted = proposed = 0
+    return cum_w
 
-    for it in range(cfg.iters):
-        gi = int(np.searchsorted(cum_w, rng.random(), side="right"))
-        grp, lms = mapping[gi]
+
+class SAChain:
+    """One Metropolis chain over the LP-SPM space, advanced one iteration at
+    a time so an orchestrator (``core/explore.py``) can interleave chains and
+    exchange their states (parallel tempering).
+
+    ``step()`` consumes RNG draws in exactly the order of the original
+    monolithic loop (group pick, operator pick, operator-internal draws,
+    acceptance draw), so a single chain's trajectory for a given seed is
+    unchanged by this refactor.
+    """
+
+    def __init__(self, g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
+                 total_batch: int, cfg: SAConfig, init: Optional[Mapping],
+                 ev: Evaluator, seed: int, cum_w: np.ndarray,
+                 t_scale: float = 1.0):
+        self.cfg = cfg
+        self.ev = ev
+        self.total_batch = total_batch
+        self.rng = np.random.default_rng(seed)
+        self.mapping: Mapping = [
+            (grp, lms) for grp, lms in
+            (init if init is not None else tangram_map(groups, g, arch))]
+        # idle cores per group
+        self.idle: List[List[int]] = []
+        for grp, lms in self.mapping:
+            used = set(lms.cores_used())
+            self.idle.append([c for c in range(arch.n_cores) if c not in used])
+        self.evals: List[GroupEval] = []
+        for grp, lms in self.mapping:
+            ge, _ = ev.eval_group(grp, lms, total_batch)
+            self.evals.append(ge)
+        self.E = sum(e.energy_j for e in self.evals)
+        self.D = sum(e.delay_s for e in self.evals)
+        self.cost = (self.E ** cfg.beta) * (self.D ** cfg.gamma)
+        self.best_cost = self.cost
+        self.best_map: Mapping = list(self.mapping)
+        self.cum_w = cum_w
+        self.ops = _Op(g, arch, self.rng)
+        self.T = cfg.t0 * self.cost * t_scale
+        self.alpha = (cfg.t_end / cfg.t0) ** (1.0 / max(1, cfg.iters))
+        self.accepted = 0
+        self.proposed = 0
+
+    def step(self) -> None:
+        """One proposal + cooling step (Metropolis acceptance)."""
+        cfg, rng, ops = self.cfg, self.rng, self.ops
+        gi = int(np.searchsorted(self.cum_w, rng.random(), side="right"))
+        grp, lms = self.mapping[gi]
         op = int(rng.integers(1, 6))
         new_idle: Optional[List[int]] = None
         if op == 1:
@@ -269,35 +273,90 @@ def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
         elif op == 3:
             cand = ops.op3(grp, lms)
         elif op == 4:
-            r4 = ops.op4(grp, lms, idle[gi])
+            r4 = ops.op4(grp, lms, self.idle[gi])
             cand, new_idle = r4 if r4 is not None else (None, None)
         else:
             cand = ops.op5(grp, lms)
-        T *= alpha
+        self.T *= self.alpha
         if cand is None:
-            continue
-        proposed += 1
-        ge, _ = ev.eval_group(grp, cand, total_batch)
-        old = evals[gi]
-        newE = E - old.energy_j + ge.energy_j
-        newD = D - old.delay_s + ge.delay_s
+            return
+        self.proposed += 1
+        ge, _ = self.ev.eval_group(grp, cand, self.total_batch)
+        old = self.evals[gi]
+        newE = self.E - old.energy_j + ge.energy_j
+        newD = self.D - old.delay_s + ge.delay_s
         new_cost = (newE ** cfg.beta) * (newD ** cfg.gamma)
-        if new_cost <= cost or rng.random() < math.exp(
-                min(0.0, -(new_cost - cost) / max(T, 1e-30))):
-            mapping[gi] = (grp, cand)
-            evals[gi] = ge
+        if new_cost <= self.cost or rng.random() < math.exp(
+                min(0.0, -(new_cost - self.cost) / max(self.T, 1e-30))):
+            self.mapping[gi] = (grp, cand)
+            self.evals[gi] = ge
             if new_idle is not None:
-                idle[gi] = new_idle
-            cost, E, D = new_cost, newE, newD
-            accepted += 1
-            if cost < best_cost:
-                best_cost = cost
-                best_map = [(gg, ll) for gg, ll in mapping]
-        if cfg.log_every and it % cfg.log_every == 0:
-            history.append(cost)
+                self.idle[gi] = new_idle
+            self.cost, self.E, self.D = new_cost, newE, newD
+            self.accepted += 1
+            self._track_best()
 
-    # final exact numbers for the best mapping
-    final = ev.evaluate(best_map, total_batch)
-    return SAResult(mapping=best_map, cost=final.cost(cfg.beta, cfg.gamma),
-                    energy_j=final.energy_j, delay_s=final.delay_s,
-                    history=history, accepted=accepted, proposed=proposed)
+    def _track_best(self) -> None:
+        if self.cost < self.best_cost:
+            self.best_cost = self.cost
+            self.best_map = list(self.mapping)
+
+    def exchange_state(self, other: "SAChain") -> None:
+        """Swap the *configurations* of two chains (replica exchange).
+
+        Temperatures, RNG streams and per-chain bests stay put — only the
+        walker (mapping, idle pools, incremental cost terms) moves between
+        temperature rungs.  Both chains re-check their best afterwards so a
+        state arriving from a hotter rung is never lost.
+        """
+        for attr in ("mapping", "idle", "evals", "cost", "E", "D"):
+            mine, theirs = getattr(self, attr), getattr(other, attr)
+            setattr(self, attr, theirs)
+            setattr(other, attr, mine)
+        self._track_best()
+        other._track_best()
+
+    def finalize(self, history: List[float]) -> SAResult:
+        """Exact re-evaluation of the best mapping found by this chain."""
+        final = self.ev.evaluate(self.best_map, self.total_batch)
+        return SAResult(mapping=self.best_map,
+                        cost=final.cost(self.cfg.beta, self.cfg.gamma),
+                        energy_j=final.energy_j, delay_s=final.delay_s,
+                        history=history, accepted=self.accepted,
+                        proposed=self.proposed)
+
+
+def sa_optimize(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
+                total_batch: int, cfg: SAConfig,
+                init: Optional[Mapping] = None,
+                evaluator: Optional[Evaluator] = None) -> SAResult:
+    """Run the SA engine; returns the best mapping found.
+
+    ``n_chains == 1`` runs the classic single chain.  ``n_chains > 1`` runs
+    replica-exchange SA (parallel tempering) over a temperature ladder with
+    one shared content-addressed evaluator cache — see
+    :func:`repro.core.explore.replica_exchange_sa`.
+    """
+    if cfg.n_chains <= 1:
+        return _sa_chain(g, arch, groups, total_batch, cfg, init, evaluator)
+    from .explore import replica_exchange_sa   # lazy: avoids import cycle
+    return replica_exchange_sa(g, arch, groups, total_batch, cfg,
+                               init=init, evaluator=evaluator)
+
+
+def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
+              total_batch: int, cfg: SAConfig, init: Optional[Mapping],
+              evaluator: Optional[Evaluator]) -> SAResult:
+    # content-addressed GroupEval cache: re-proposals, repeated chains and
+    # the final exact re-evaluation hit it; results are identical either way
+    ev = evaluator or CachedEvaluator(arch, g)
+    chain = SAChain(g, arch, groups, total_batch, cfg, init, ev,
+                    seed=cfg.seed, cum_w=group_draw_cdf(groups, arch.n_cores))
+    history: List[float] = []
+    for it in range(cfg.iters):
+        chain.step()
+        # unconditional: history length depends only on iters/log_every,
+        # not on how many proposals happened to be applicable
+        if cfg.log_every and it % cfg.log_every == 0:
+            history.append(chain.cost)
+    return chain.finalize(history)

@@ -5,8 +5,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 Each named VARIANT is a (rules/cfg/bundle)-override set applied to one
 (arch x shape) cell on the single-pod mesh.  Results append to
-results/hillclimb.json keyed cell/variant, with the three roofline terms,
+results/hillclimb.jsonl keyed cell/variant, with the three roofline terms,
 so EXPERIMENTS.md §Perf can show before/after per hypothesis.
+
+The sweep is resumable through the same append-only JSON-lines artifact
+the DSE checkpoints use (``repro.core.explore.ResumableSweep``):
+completed-ok cells are skipped on re-run, failed cells are retried, and a
+kill mid-measure loses at most the in-flight cell.
 
   PYTHONPATH=src python -m repro.launch.hillclimb --cell \
       qwen1.5-110b/train_4k --variant baseline,no_fsdp ...
@@ -18,6 +23,8 @@ import time
 import traceback
 from pathlib import Path
 from typing import Dict
+
+from repro.core.explore import ResumableSweep
 
 from .dryrun import run_cell
 
@@ -70,19 +77,35 @@ def main() -> None:
     ap.add_argument("--variant", required=True,
                     help="comma-separated variant names")
     ap.add_argument("--mesh", default="single")
-    ap.add_argument("--out", default="results/hillclimb.json")
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
     arch, shape = args.cell.split("/")
-    out_path = Path(args.out)
-    out_path.parent.mkdir(parents=True, exist_ok=True)
-    results = json.loads(out_path.read_text()) if out_path.exists() else {}
+    # append-only sweep log; duplicate keys are last-wins, so --force simply
+    # appends an overriding record without losing history
+    out = Path(args.out)
+    if out.suffix == ".json":
+        # an old-style invocation (pre-JSONL default): never write JSONL
+        # into a .json path — redirect to the sibling and migrate below
+        print(f"[hillclimb] --out {out} is the legacy dict format; "
+              f"writing to {out.with_suffix('.jsonl')} instead")
+        out = out.with_suffix(".jsonl")
+    legacy = out.with_suffix(".json")
+    migrate = legacy.exists() and not out.exists()
+    sweep = ResumableSweep(out)
+    if migrate:
+        # one-time carry-over of pre-JSONL records so the before/after
+        # comparison keeps its "before" rows
+        for key, rec in json.loads(legacy.read_text()).items():
+            sweep.add(key, rec)
+        print(f"[migrate] {len(sweep)} records from {legacy} -> {out}")
 
     for vname in args.variant.split(","):
         spec = VARIANTS[vname]
         key = f"{args.cell}|{args.mesh}|{vname}"
-        if key in results and results[key].get("ok") and not args.force:
+        prev = sweep.get(key)
+        if prev is not None and prev.get("ok") and not args.force:
             print(f"[skip] {key}")
             continue
         print(f"[variant] {key} ...", flush=True)
@@ -104,8 +127,7 @@ def main() -> None:
             rec = {"ok": False, "variant": vname,
                    "error": f"{type(e).__name__}: {e}"}
             print(f"[FAIL] {key}: {rec['error'][:160]}", flush=True)
-        results[key] = rec
-        out_path.write_text(json.dumps(results, indent=1))
+        sweep.add(key, rec)
 
 
 if __name__ == "__main__":

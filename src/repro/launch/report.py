@@ -51,11 +51,17 @@ def multi_pod_table(path: str = "results/dryrun.json") -> str:
     return "\n".join(out)
 
 
-def hillclimb_table(path: str = "results/hillclimb.json") -> str:
+def hillclimb_table(path: str = "results/hillclimb.jsonl") -> str:
     p = Path(path)
-    if not p.exists():
+    legacy = p.with_suffix(".json")
+    # merge legacy dict-format records under the JSONL ones, so "before"
+    # rows recorded pre-migration stay in the comparison
+    d = json.loads(legacy.read_text()) if legacy.exists() else {}
+    if p.exists():
+        from repro.core.explore import ResumableSweep
+        d.update(ResumableSweep.read(p).as_dict())  # read-only: never resets
+    if not d:
         return "(no hillclimb results yet)"
-    d = json.loads(p.read_text())
     out = ["| cell | variant | t_compute | t_memory | t_collective | "
            "bound | frac |", "|---|---|---|---|---|---|---|"]
     for k, v in sorted(d.items()):

@@ -1,0 +1,346 @@
+"""Exploration engine: parallel determinism, screening, replica exchange,
+checkpoint/resume, Pareto frontier, seed derivation, SA history logging."""
+
+import json
+
+import pytest
+
+from repro.core import dse as dse_mod
+from repro.core.dse import DSEConfig, grid_candidates, joint_reuse_dse, run_dse
+from repro.core.explore import (ExplorationEngine, ResumableSweep,
+                                arch_from_dict, arch_to_dict, candidate_key,
+                                derive_seed, pareto_frontier,
+                                replica_exchange_sa)
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import simba_arch
+from repro.core.sa import SAConfig, sa_optimize
+from repro.core.workloads import transformer
+
+
+def _tf_small():
+    return transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+
+
+def _grid(n=8):
+    cands = grid_candidates(
+        72.0, mac_options=(512, 1024), cut_options=(1, 2),
+        dram_per_tops=(2.0,), noc_options=(16, 32), d2d_ratio=(0.5,),
+        glb_options=(1024, 2048))
+    assert len(cands) >= n
+    return cands[:n]
+
+
+def _cfg(iters=60, seed=3, **kw):
+    return DSEConfig(batch=8, sa=SAConfig(iters=iters, seed=seed, **kw))
+
+
+def _sig(points):
+    return [(p.arch, p.objective, p.energy_j, p.delay_s) for p in points]
+
+
+# ---------------------------------------------------------------------------
+# Parallel determinism
+# ---------------------------------------------------------------------------
+
+def test_run_dse_parallel_bit_identical_to_serial():
+    g = _tf_small()
+    cands = _grid(6)
+    serial = run_dse(cands, {"TF": g}, _cfg())
+    par = run_dse(cands, {"TF": g}, _cfg(), n_workers=4)
+    assert _sig(serial) == _sig(par)
+
+
+def test_per_candidate_seeds_stable_under_subsetting():
+    """A candidate's result depends on its index, not on which other
+    candidates run (what makes screening and resume consistent)."""
+    g = _tf_small()
+    cands = _grid(4)
+    full = run_dse(cands, {"TF": g}, _cfg())
+    by_arch = {p.arch: p.objective for p in full}
+    with ExplorationEngine({"TF": g}, _cfg()) as eng:
+        sub = eng.map_archs(cands[:2])     # indices 0, 1 as in the full run
+    for pt in sub:
+        assert pt.objective == by_arch[pt.arch]
+
+
+def test_derive_seed_deterministic_and_distinct():
+    assert derive_seed(3, 5) == derive_seed(3, 5)
+    seeds = {derive_seed(0, i) for i in range(100)}
+    assert len(seeds) == 100
+    assert derive_seed(0, 1) != derive_seed(1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Screening
+# ---------------------------------------------------------------------------
+
+def test_screening_prunes_and_matches_full_run():
+    g = _tf_small()
+    cands = _grid(6)
+    full = run_dse(cands, {"TF": g}, _cfg())
+    by_arch = {p.arch: p.objective for p in full}
+    screened = run_dse(cands, {"TF": g}, _cfg(), screen_keep=0.5)
+    assert len(screened) == 3
+    # survivors' SA results are identical to the exhaustive run's
+    for p in screened:
+        assert p.objective == by_arch[p.arch]
+
+
+def test_screen_keep_one_is_exhaustive():
+    g = _tf_small()
+    cands = _grid(4)
+    assert _sig(run_dse(cands, {"TF": g}, _cfg())) == \
+        _sig(run_dse(cands, {"TF": g}, _cfg(), screen_keep=1.0))
+
+
+def test_engine_screen_sorted():
+    g = _tf_small()
+    with ExplorationEngine({"TF": g}, _cfg()) as eng:
+        pts = eng.screen(_grid(5))
+    objs = [p.objective for p in pts]
+    assert objs == sorted(objs)
+
+
+# ---------------------------------------------------------------------------
+# Replica-exchange SA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_replica_exchange_never_worse_than_single_chain(seed):
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    single = sa_optimize(g, arch, groups, 8, SAConfig(iters=300, seed=seed))
+    multi = sa_optimize(g, arch, groups, 8,
+                        SAConfig(iters=300, seed=seed, n_chains=4))
+    assert multi.cost <= single.cost
+    for grp, lms in multi.mapping:
+        lms.validate(grp, g, arch.n_cores, arch.n_dram)
+
+
+def test_replica_exchange_deterministic():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    cfg = SAConfig(iters=200, seed=5, n_chains=3)
+    r1 = replica_exchange_sa(g, arch, groups, 8, cfg)
+    r2 = replica_exchange_sa(g, arch, groups, 8, cfg)
+    assert r1.cost == r2.cost
+    assert r1.proposed == r2.proposed
+
+
+def test_sa_history_logged_unconditionally():
+    """History length depends only on iters/log_every, not on how many
+    proposals happened to be applicable."""
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    for seed in (0, 1, 2):
+        res = sa_optimize(g, arch, groups, 8,
+                          SAConfig(iters=200, seed=seed, log_every=10))
+        assert len(res.history) == 20
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_skips_completed(tmp_path, monkeypatch):
+    g = _tf_small()
+    cands = _grid(4)
+    ck = tmp_path / "sweep.jsonl"
+    first = run_dse(cands, {"TF": g}, _cfg(), checkpoint=ck)
+    assert ck.exists()
+
+    calls = []
+    real = dse_mod.evaluate_candidate
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse_mod, "evaluate_candidate", counting)
+    resumed = run_dse(cands, {"TF": g}, _cfg(), checkpoint=ck)
+    assert not calls                       # everything came from the file
+    assert [p.objective for p in resumed] == [p.objective for p in first]
+
+    # partial resume: drop the last record, only that candidate re-runs
+    lines = ck.read_text().splitlines()
+    ck.write_text("\n".join(lines[:-1]) + "\n")
+    resumed2 = run_dse(cands, {"TF": g}, _cfg(), checkpoint=ck)
+    assert len(calls) == 1
+    assert [p.objective for p in resumed2] == [p.objective for p in first]
+
+
+def test_checkpoint_config_change_discards(tmp_path):
+    g = _tf_small()
+    cands = _grid(2)
+    ck = tmp_path / "sweep.jsonl"
+    run_dse(cands, {"TF": g}, _cfg(iters=40), checkpoint=ck)
+    # different SA budget -> stale records must not be reused
+    pts = run_dse(cands, {"TF": g}, _cfg(iters=80), checkpoint=ck)
+    fresh = run_dse(cands, {"TF": g}, _cfg(iters=80))
+    assert [p.objective for p in pts] == [p.objective for p in fresh]
+
+
+def test_resumable_sweep_tolerates_truncated_line(tmp_path):
+    p = tmp_path / "s.jsonl"
+    s = ResumableSweep(p, config_fingerprint="fp")
+    s.add("a", {"x": 1})
+    s.add("b", {"x": 2})
+    with p.open("a") as f:
+        f.write('{"_key": "c", "x":')       # killed mid-write
+    s2 = ResumableSweep(p, config_fingerprint="fp")
+    assert "a" in s2 and "b" in s2 and "c" not in s2
+    assert s2.get("b") == {"x": 2}
+    # last-wins override
+    s2.add("a", {"x": 9})
+    assert ResumableSweep(p, config_fingerprint="fp").get("a") == {"x": 9}
+
+
+def test_checkpoint_workload_change_discards(tmp_path):
+    """Editing the graph under an unchanged dict key must invalidate the
+    checkpoint (fingerprint hashes workload content, not names)."""
+    cands = _grid(2)
+    ck = tmp_path / "sweep.jsonl"
+    run_dse(cands, {"TF": _tf_small()}, _cfg(), checkpoint=ck)
+    g2 = transformer(n_layers=3, d_model=128, d_ff=256, seq=64, name="tf-s")
+    pts = run_dse(cands, {"TF": g2}, _cfg(), checkpoint=ck)
+    fresh = run_dse(cands, {"TF": g2}, _cfg())
+    assert [p.objective for p in pts] == [p.objective for p in fresh]
+
+
+def test_checkpoint_grid_reorder_recomputes_shifted_seeds(tmp_path):
+    """Editing the candidate grid shifts indices (and derived seeds);
+    resumed records must not be reused under the wrong seed."""
+    g = _tf_small()
+    cands = _grid(4)
+    ck = tmp_path / "sweep.jsonl"
+    run_dse(cands, {"TF": g}, _cfg(), checkpoint=ck)
+    reordered = list(reversed(cands))
+    resumed = run_dse(reordered, {"TF": g}, _cfg(), checkpoint=ck)
+    fresh = run_dse(reordered, {"TF": g}, _cfg())
+    assert _sig(resumed) == _sig(fresh)
+
+
+def test_resumable_sweep_discard_keeps_backup(tmp_path):
+    p = tmp_path / "s.jsonl"
+    s = ResumableSweep(p, config_fingerprint="v1")
+    s.add("a", {"x": 1})
+    s2 = ResumableSweep(p, config_fingerprint="v2")   # config changed
+    assert "a" not in s2
+    bak = tmp_path / "s.jsonl.bak"
+    assert bak.exists() and '"x": 1' in bak.read_text()
+    # a second discard must not clobber the first backup
+    s2.add("b", {"x": 2})
+    ResumableSweep(p, config_fingerprint="v3")
+    assert '"x": 1' in bak.read_text()
+    assert '"x": 2' in (tmp_path / "s.jsonl.bak1").read_text()
+    # resume=False also sets the old file aside instead of truncating
+    ResumableSweep(p, config_fingerprint="v3", resume=False)
+    assert (tmp_path / "s.jsonl.bak2").exists()
+
+
+def test_resumable_sweep_read_only_never_writes(tmp_path):
+    p = tmp_path / "s.jsonl"
+    s = ResumableSweep(p, config_fingerprint="v1")
+    s.add("a", {"x": 1})
+    before = p.read_text()
+    # read() must not reset on fingerprint mismatch or corruption
+    with p.open("a") as f:
+        f.write("{broken\n")
+        f.write(json.dumps({"_key": "b", "x": 2}) + "\n")
+    mid = p.read_text()
+    r = ResumableSweep.read(p)
+    assert r.get("a") == {"x": 1} and r.get("b") == {"x": 2}
+    assert p.read_text() == mid
+    assert before in mid
+
+
+def test_arch_roundtrip_and_key():
+    for arch in _grid(4) + [simba_arch()]:
+        assert arch_from_dict(json.loads(
+            json.dumps(arch_to_dict(arch)))) == arch
+    keys = {candidate_key(a) for a in _grid(8)}
+    assert len(keys) == 8
+
+
+def test_arch_from_dict_refuses_unknown_tech():
+    d = arch_to_dict(simba_arch())
+    d["tech"] = "tsmc5-not-registered"
+    with pytest.raises(ValueError, match="unknown tech"):
+        arch_from_dict(d)
+
+
+def test_corrupt_mid_line_discards_all_records(tmp_path):
+    """Records parsed before a corrupt non-trailing line must not survive
+    the discard — the fresh file would silently omit them on skip/resume."""
+    p = tmp_path / "s.jsonl"
+    s = ResumableSweep(p, config_fingerprint="fp")
+    s.add("a", {"x": 1})
+    with p.open("a") as f:
+        f.write("{broken\n")
+        f.write(json.dumps({"_key": "b", "x": 2}) + "\n")
+    s2 = ResumableSweep(p, config_fingerprint="fp")
+    assert "a" not in s2 and "b" not in s2 and len(s2) == 0
+    assert (tmp_path / "s.jsonl.bak").exists()
+
+
+def test_missing_header_invalidates_fingerprinted_sweep(tmp_path):
+    """If the _config header is lost (killed while writing it), records can
+    no longer be proven to match this config and must be discarded."""
+    p = tmp_path / "s.jsonl"
+    s = ResumableSweep(p, config_fingerprint="fp")
+    s.add("a", {"x": 1})
+    # strip the header line
+    lines = [ln for ln in p.read_text().splitlines() if "_config" not in ln]
+    p.write_text("\n".join(lines) + "\n")
+    s2 = ResumableSweep(p, config_fingerprint="fp")
+    assert "a" not in s2
+    # un-fingerprinted sweeps (hillclimb) never require a header
+    p2 = tmp_path / "h.jsonl"
+    h = ResumableSweep(p2)
+    h.add("k", {"ok": True})
+    assert ResumableSweep(p2).get("k") == {"ok": True}
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier
+# ---------------------------------------------------------------------------
+
+def test_pareto_frontier_dominance():
+    def pt(mc, e, d):
+        return dse_mod.DSEPoint(arch=simba_arch(), mc=mc, energy_j=e,
+                                delay_s=d, objective=mc * e * d)
+
+    a = pt(1.0, 1.0, 1.0)
+    b = pt(2.0, 2.0, 2.0)       # dominated by a
+    c = pt(0.5, 3.0, 1.0)       # trades MC for E
+    d = pt(1.0, 1.0, 1.0)       # tie with a: both kept
+    front = pareto_frontier([a, b, c, d])
+    assert b not in front
+    assert a in front and c in front and d in front
+
+
+def test_pareto_frontier_of_real_sweep():
+    g = _tf_small()
+    pts = run_dse(_grid(6), {"TF": g}, _cfg(), use_sa=False)
+    front = pareto_frontier(pts)
+    assert 1 <= len(front) <= len(pts)
+    assert front[0].objective == pts[0].objective  # best scalar is never dominated
+
+
+# ---------------------------------------------------------------------------
+# Joint reuse DSE through the engine
+# ---------------------------------------------------------------------------
+
+def test_joint_reuse_dse_ranks_and_parallelizes():
+    g = _tf_small()
+    bases = [simba_arch().replace(xcut=1, ycut=1),
+             simba_arch().replace(xcut=2, ycut=1)]
+    serial = joint_reuse_dse(bases, (1, 4), {"TF": g}, _cfg(iters=40))
+    assert len(serial) == 2
+    assert serial[0][1] <= serial[1][1]
+    par = joint_reuse_dse(bases, (1, 4), {"TF": g}, _cfg(iters=40),
+                          n_workers=2)
+    assert [(b, p) for b, p in serial] == [(b, p) for b, p in par]
