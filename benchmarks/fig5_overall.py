@@ -14,6 +14,8 @@ import math
 from typing import Dict
 
 from repro.core.evaluator import Evaluator
+from repro.core.explore import (ResumableSweep, candidate_key,
+                                graph_fingerprint)
 from repro.core.graph_partition import partition_graph
 from repro.core.hw import gemini_arch_72t, simba_arch
 from repro.core.mc import evaluate_mc
@@ -21,33 +23,53 @@ from repro.core.sa import SAConfig, sa_optimize
 from repro.core.tangram import tangram_map
 from repro.core.workloads import PAPER_WORKLOADS
 
-from .common import cached
+from .common import RESULTS, cached
 
 SA_ITERS = 4000
 BATCHES = (1, 64)
 
 
-def _run() -> Dict:
+def _cell(g, batch) -> Dict:
+    cell = {}
+    for arch_name, arch in (("S-Arch", simba_arch()),
+                            ("G-Arch", gemini_arch_72t())):
+        groups = partition_graph(g, arch, batch)
+        ev = Evaluator(arch, g)
+        tmap = tangram_map(groups, g, arch)
+        rt = ev.evaluate(tmap, batch)
+        cell[f"{arch_name}+T-Map"] = {"E": rt.energy_j,
+                                      "D": rt.delay_s}
+        res = sa_optimize(g, arch, groups, batch,
+                          SAConfig(iters=SA_ITERS, seed=0),
+                          init=tmap, evaluator=ev)
+        cell[f"{arch_name}+G-Map"] = {"E": res.energy_j,
+                                      "D": res.delay_s}
+    return cell
+
+
+def _run(force: bool = False) -> Dict:
+    # per-cell resumable sweep: the 10 (DNN x batch) cells each cost one
+    # 4000-iteration SA per arch, so a killed run resumes at the cell that
+    # was in flight instead of recomputing finished DNNs from scratch
+    graphs = {wname: wfn() for wname, wfn in PAPER_WORKLOADS.items()}
+    fp = ("fig5:v1:iters{}:b{}:archs({},{}):wl={}".format(
+        SA_ITERS, ",".join(map(str, BATCHES)),
+        candidate_key(simba_arch()), candidate_key(gemini_arch_72t()),
+        ",".join(f"{n}:{graph_fingerprint(g)}"
+                 for n, g in sorted(graphs.items()))))
+    RESULTS.mkdir(exist_ok=True)
+    sweep = ResumableSweep(RESULTS / "fig5_overall.ckpt.jsonl", fp,
+                           resume=not force)
     out: Dict = {"cells": {}}
-    for wname, wfn in PAPER_WORKLOADS.items():
-        g = wfn()
+    for wname, g in graphs.items():
         for batch in BATCHES:
-            cell = {}
-            for arch_name, arch in (("S-Arch", simba_arch()),
-                                    ("G-Arch", gemini_arch_72t())):
-                groups = partition_graph(g, arch, batch)
-                ev = Evaluator(arch, g)
-                tmap = tangram_map(groups, g, arch)
-                rt = ev.evaluate(tmap, batch)
-                cell[f"{arch_name}+T-Map"] = {"E": rt.energy_j,
-                                              "D": rt.delay_s}
-                res = sa_optimize(g, arch, groups, batch,
-                                  SAConfig(iters=SA_ITERS, seed=0),
-                                  init=tmap, evaluator=ev)
-                cell[f"{arch_name}+G-Map"] = {"E": res.energy_j,
-                                              "D": res.delay_s}
-            out["cells"][f"{wname}/b{batch}"] = cell
-            print(f"[fig5] {wname}/b{batch}: "
+            key = f"{wname}/b{batch}"
+            cell = sweep.get(key)
+            if cell is None:
+                cell = _cell(g, batch)
+                sweep.add(key, cell)
+            out["cells"][key] = cell
+            print(f"[fig5] {key}: "
                   f"perf x{cell['S-Arch+T-Map']['D'] / cell['G-Arch+G-Map']['D']:.2f} "
                   f"eff x{cell['S-Arch+T-Map']['E'] / cell['G-Arch+G-Map']['E']:.2f}",
                   flush=True)
@@ -79,7 +101,7 @@ def summarize(data: Dict) -> Dict[str, float]:
 
 
 def main(force: bool = False) -> Dict:
-    data = cached("fig5_overall", _run, force)
+    data = cached("fig5_overall", lambda: _run(force), force)
     s = summarize(data)
     print(f"[fig5] GEOMEAN: G-Arch+G-Map vs S-Arch+T-Map: "
           f"perf x{s['perf_x']:.2f} (paper 1.98x), "

@@ -13,13 +13,18 @@ import numpy as np
 
 from repro.core.analyzer import d2d_hop_stats, router_grid
 from repro.core.evaluator import Evaluator
+from repro.core.explore import (ResumableSweep, candidate_key,
+                                graph_fingerprint, mapping_from_jsonable,
+                                mapping_to_jsonable)
 from repro.core.graph_partition import partition_graph
 from repro.core.hw import gemini_arch_72t
 from repro.core.sa import SAConfig, sa_optimize
 from repro.core.tangram import tangram_map
 from repro.core.workloads import transformer
 
-from .common import cached
+from .common import RESULTS, cached
+
+SA_ITERS = 6000
 
 
 def _ascii_heatmap(arch, edge_bytes: np.ndarray) -> str:
@@ -39,7 +44,7 @@ def _ascii_heatmap(arch, edge_bytes: np.ndarray) -> str:
     return "\n".join(lines)
 
 
-def _run() -> Dict:
+def _run(force: bool = False) -> Dict:
     arch = gemini_arch_72t()
     g = transformer()
     batch = 64
@@ -48,9 +53,27 @@ def _run() -> Dict:
     tmap = tangram_map(groups, g, arch)
     rt = ev.evaluate(tmap, batch)
     t_stats = d2d_hop_stats(arch, rt.analyses)
-    res = sa_optimize(g, arch, groups, batch, SAConfig(iters=6000, seed=0),
-                      init=tmap, evaluator=ev)
-    rg = ev.evaluate(res.mapping, batch)
+    # the 6000-iteration SA dominates this figure's wall time; its winning
+    # mapping checkpoints through the LMS serializer, so a resumed run
+    # re-derives every downstream stat from the stored mapping exactly
+    RESULTS.mkdir(exist_ok=True)
+    sweep = ResumableSweep(
+        RESULTS / "fig9_heatmap.ckpt.jsonl",
+        f"fig9:v1:iters{SA_ITERS}:b{batch}:{candidate_key(arch)}:"
+        f"wl={graph_fingerprint(g)}",
+        resume=not force)
+    rec = sweep.get("gmap_sa")
+    if rec is not None:
+        gmap = mapping_from_jsonable(rec["mapping"])
+        print(f"[fig9] resumed G-Map SA mapping from {sweep.path}")
+    else:
+        res = sa_optimize(g, arch, groups, batch,
+                          SAConfig(iters=SA_ITERS, seed=0),
+                          init=tmap, evaluator=ev)
+        gmap = res.mapping
+        sweep.add("gmap_sa", {"mapping": mapping_to_jsonable(gmap),
+                              "E": res.energy_j, "D": res.delay_s})
+    rg = ev.evaluate(gmap, batch)
     g_stats = d2d_hop_stats(arch, rg.analyses)
     t_edges = sum(a.edge_bytes for a in rt.analyses)
     g_edges = sum(a.edge_bytes for a in rg.analyses)
@@ -69,7 +92,7 @@ def _run() -> Dict:
 
 
 def main(force: bool = False) -> Dict:
-    d = cached("fig9_heatmap", _run, force)
+    d = cached("fig9_heatmap", lambda: _run(force), force)
     print(f"[fig9] total hop-bytes: {d['hops_reduction_pct']:+.1f}% "
           f"(paper -34.2%), D2D hop-bytes: {d['d2d_reduction_pct']:+.1f}% "
           f"(paper -74%), hottest link {d['tmap_max_link']/d['gmap_max_link']:.2f}x cooler")

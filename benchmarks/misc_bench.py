@@ -17,14 +17,14 @@ import numpy as np
 from repro.core.dse import DSEConfig, grid_candidates, run_dse
 from repro.core.encoding import space_size_lower_bound, tangram_space_upper_bound
 from repro.core.evaluator import CachedEvaluator, Evaluator
-from repro.core.explore import pareto_frontier
+from repro.core.explore import merge_checkpoints, pareto_frontier
 from repro.core.graph_partition import partition_graph
 from repro.core.hw import simba_arch
 from repro.core.sa import SAConfig, sa_optimize
 from repro.core.tangram import tangram_map
 from repro.core.workloads import transformer
 
-from .common import cached
+from .common import RESULTS, cached
 
 
 def space_size() -> Dict:
@@ -158,25 +158,35 @@ def _dse_grid(n: int):
 
 
 def dse_throughput(n_candidates: int = 64, n_workers: int = 4,
-                   iters: int = 1500) -> Dict:
-    """Wall-clock of a ≥64-candidate SA sweep: serial vs ``n_workers``.
+                   iters: int = 1500, n_workloads: int = 1) -> Dict:
+    """Wall-clock of a >=64-task SA sweep: serial vs ``n_workers``.
 
     Screening is OFF, so the speedup is attributable to process parallelism
     alone; the bit-identical check confirms the parallel path computes the
     exact same points.  The SA budget is the Table-I refinement default
-    (1500 iters), so per-candidate work dominates the one-time worker
-    startup as it does in a real sweep.  The speedup ceiling is
-    min(n_workers, effective cores): on the paper's 80-thread Xeon the
-    same sweep spreads over every core; a cgroup-throttled container can
-    sit well below its nominal nproc (the CI container measured 1.12x at
-    nproc=2 because only ~1.3 cores of capacity were actually grantable),
-    which is why cpu_count is recorded next to the ratio.
+    (1500 iters), so per-task work dominates the one-time worker startup as
+    it does in a real sweep.  The speedup ceiling is min(n_workers,
+    effective cores): on the paper's 80-thread Xeon the same sweep spreads
+    over every core; a cgroup-throttled container can sit well below its
+    nominal nproc (the CI container measured 1.12x at nproc=2 because only
+    ~1.3 cores of capacity were actually grantable), which is why
+    cpu_count is recorded next to the ratio.
+
+    ``n_workloads > 1`` is the **(candidate x workload) fan-out mode**: the
+    engine's unit of work is one (candidate, workload) pair, so a sweep of
+    ``n_candidates`` over ``n_workloads`` schedules their product as
+    independently-stealable tasks — with many workloads the pool load-
+    balances within a candidate, not just across candidates (a single
+    slow candidate no longer serializes its workload list).
     """
     import os
-    g = transformer(n_layers=2, d_model=256, d_ff=512, seq=128, name="tf-m")
+    workloads = {
+        f"TF{i}": transformer(n_layers=2, d_model=256, d_ff=512,
+                              seq=96 + 32 * i, name=f"tf-m{i}")
+        for i in range(n_workloads)}
     cands = _dse_grid(n_candidates)
     cfg = DSEConfig(batch=64, sa=SAConfig(iters=iters, seed=0))
-    workloads = {"TF": g}
+    n_tasks = n_candidates * n_workloads
 
     t0 = time.time()
     serial = run_dse(cands, workloads, cfg)
@@ -187,11 +197,13 @@ def dse_throughput(n_candidates: int = 64, n_workers: int = 4,
     identical = ([(p.arch, p.objective, p.energy_j, p.delay_s) for p in serial]
                  == [(p.arch, p.objective, p.energy_j, p.delay_s) for p in par])
     speedup = t_serial / t_parallel
-    print(f"[dse] {n_candidates} candidates x {iters} SA iters: "
+    print(f"[dse] {n_candidates} candidates x {n_workloads} workloads "
+          f"({n_tasks} tasks) x {iters} SA iters: "
           f"serial {t_serial:.1f}s vs {n_workers} workers {t_parallel:.1f}s "
           f"-> {speedup:.2f}x (cores={os.cpu_count()}, "
           f"bit-identical={identical})")
     return {"n_candidates": n_candidates, "sa_iters": iters,
+            "n_workloads": n_workloads, "n_tasks": n_tasks,
             "n_workers": n_workers, "cpu_count": os.cpu_count(),
             "serial_s": t_serial, "parallel_s": t_parallel,
             "speedup": speedup, "identical": identical}
@@ -201,15 +213,26 @@ def dse_smoke() -> Dict:
     """CI smoke: exercise every engine feature end-to-end on a tiny grid.
 
     Tiny budget (8 candidates, SA iters <= 200) so it runs on every push:
-    screening, multiprocess workers, bit-identical check, replica-exchange
-    SA, checkpoint + resume, and the Pareto frontier.
+    (candidate x workload) fan-out, screening, multiprocess workers,
+    bit-identical check, replica-exchange SA, checkpoint + resume, sharded
+    sweeps + merge, and the Pareto frontier.  Checkpoints are written under
+    ``results/smoke_*.jsonl`` (recreated each run) so a failing CI job can
+    upload them for post-mortem instead of losing a tempdir.
     """
-    import os
-    import tempfile
     g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
     cands = _dse_grid(8)
     workloads = {"TF": g}
     cfg = DSEConfig(batch=8, sa=SAConfig(iters=150, seed=0))
+    RESULTS.mkdir(exist_ok=True)
+    smoke_files = []
+
+    def _ckpt(name):
+        p = RESULTS / f"smoke_{name}.ckpt.jsonl"
+        if p.exists():
+            p.unlink()                   # smoke always measures from scratch
+        smoke_files.append(p)
+        return p
+
     t0 = time.time()
     serial = run_dse(cands, workloads, cfg)
     par = run_dse(cands, workloads, cfg, n_workers=2)
@@ -217,18 +240,30 @@ def dse_smoke() -> Dict:
     assert identical, "parallel DSE diverged from serial"
     screened = run_dse(cands, workloads, cfg, screen_keep=0.5)
     assert len(screened) == 4
-    with tempfile.TemporaryDirectory() as td:
-        ck = os.path.join(td, "smoke.jsonl")
-        run_dse(cands, workloads, cfg, checkpoint=ck)
-        resumed = run_dse(cands, workloads, cfg, checkpoint=ck)
+    ck = _ckpt("resume")
+    run_dse(cands, workloads, cfg, checkpoint=ck)
+    resumed = run_dse(cands, workloads, cfg, checkpoint=ck)
     assert [p.objective for p in resumed] == [p.objective for p in serial]
+    # sharded sweep: 2 shards into independent checkpoints, merged, and the
+    # merged checkpoint reconstructs the full sweep bit-identically
+    shard_paths = []
+    for i in range(2):
+        sck = _ckpt(f"shard{i}of2")
+        run_dse(cands, workloads, cfg, shard=(i, 2), checkpoint=sck)
+        shard_paths.append(sck)
+    merged = _ckpt("merged")
+    report = merge_checkpoints(shard_paths, merged)
+    assert report.n_records == len(cands) and not report.skipped
+    remerged = run_dse(cands, workloads, cfg, checkpoint=merged)
+    assert [p.objective for p in remerged] == [p.objective for p in serial]
     # n_chains=3 so the swap ladder has two chains and exchanges actually
-    # execute (n_chains=2 degenerates to independent seeds + elitism)
+    # execute (n_chains=2 degenerates and is auto-bumped by sa_optimize)
     re_cfg = DSEConfig(batch=8, sa=SAConfig(iters=150, seed=0, n_chains=3))
     re_pts = run_dse(cands[:2], workloads, re_cfg)
     frontier = pareto_frontier(serial)
     out = {"n_candidates": len(cands), "identical": identical,
            "n_screened": len(screened), "n_frontier": len(frontier),
+           "n_merged_records": report.n_records,
            "re_best": re_pts[0].objective, "best": serial[0].objective,
            "_wall_s": time.time() - t0}
     print(f"[smoke] engine end-to-end OK: {out}")
@@ -281,9 +316,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny uncached end-to-end engine exercise (CI)")
+    ap.add_argument("--fanout", action="store_true",
+                    help="uncached (candidate x workload) fan-out "
+                    "throughput run (16 candidates x 4 workloads)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     if args.smoke:
         dse_smoke()
+    elif args.fanout:
+        dse_throughput(n_candidates=16, n_workers=4, iters=600,
+                       n_workloads=4)
     else:
         main(force=args.force)

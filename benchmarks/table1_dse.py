@@ -3,20 +3,37 @@
 Runs through the exploration engine (``repro.core.explore``): the T-Map
 screening stage scores every Table-I candidate analytically and only the
 best dozen proceed to the SA mapper (the paper's 80-thread exhaustive SA,
-traded for screening on this container), candidates fan out over worker
-processes, and the sweep checkpoints to ``results/table1_dse.ckpt.jsonl``
-so an interrupted run resumes where it stopped.  Expected outcome: a small
-chiplet count (1-4), NoC >= 32 GB/s, GLB >= 2 MB — the neighborhood of the
-paper's (2, 36, 144GB/s, 32GB/s, 16GB/s, 2MB, 1024).
+traded for screening on this container), (candidate x workload) tasks fan
+out over worker processes, and the sweep checkpoints to a
+``ResumableSweep`` JSONL so an interrupted run resumes where it stopped.
+Expected outcome: a small chiplet count (1-4), NoC >= 32 GB/s, GLB >= 2 MB
+— the neighborhood of the paper's (2, 36, 144GB/s, 32GB/s, 16GB/s, 2MB,
+1024).
+
+The sweep also shards (``--shard i/n`` evaluates candidates with
+``index % n == i`` into an independent checkpoint) and merges
+(``--merge shard1.jsonl shard2.jsonl ... --checkpoint merged.jsonl``), so
+CI runs the real DSE as a matrix of shard jobs whose merged result is
+bit-identical to the unsharded sweep:
+
+  python -m benchmarks.table1_dse --quick --shard 0/3     # one matrix job
+  python -m benchmarks.table1_dse --quick --merge results/*.shard*of3.ckpt.jsonl \
+      --checkpoint results/merged.ckpt.jsonl              # merge job
+  python -m benchmarks.table1_dse --quick --checkpoint results/merged.ckpt.jsonl \
+      --out results/merged.json --expect results/fresh.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
-from typing import Dict
+from pathlib import Path
+from typing import Dict, Optional, Tuple
 
 from repro.core.dse import DSEConfig, grid_candidates
-from repro.core.explore import ExplorationEngine, pareto_frontier
+from repro.core.explore import (ExplorationEngine, merge_checkpoints,
+                                pareto_frontier, parse_shard_spec)
 from repro.core.sa import SAConfig
 from repro.core.workloads import transformer
 
@@ -26,13 +43,17 @@ TOPS = 72.0
 N_REFINE = 12
 
 
-def _run(force: bool = False) -> Dict:
-    ckpt = RESULTS / "table1_dse.ckpt.jsonl"
-    if force and ckpt.exists():
-        # the sweep fingerprint versions cfg+workloads, not the cost model:
-        # a forced re-measure must not replay checkpointed numbers
-        ckpt.unlink()
-    workloads = {"TF": transformer()}
+def _setup(quick: bool):
+    """(candidates, workloads, cfg, screen_keep) for the two run modes."""
+    if quick:
+        cands = grid_candidates(
+            TOPS, mac_options=(512, 1024), cut_options=(1, 2),
+            dram_per_tops=(2.0,), noc_options=(16, 32), d2d_ratio=(0.5,),
+            glb_options=(1024, 2048))
+        wl = {"TF": transformer(n_layers=2, d_model=128, d_ff=256, seq=64,
+                                name="tf-s")}
+        cfg = DSEConfig(batch=8, sa=SAConfig(iters=150, seed=0))
+        return cands, wl, cfg, 0.5
     cands = grid_candidates(
         TOPS,
         mac_options=(512, 1024, 2048),
@@ -41,37 +62,86 @@ def _run(force: bool = False) -> Dict:
         noc_options=(16, 32, 64),
         d2d_ratio=(0.5, 1.0),
         glb_options=(1024, 2048, 4096))
-    print(f"[table1] {len(cands)} candidates (trimmed Table-I grid)")
+    wl = {"TF": transformer()}
     cfg = DSEConfig(batch=64, sa=SAConfig(iters=1500, seed=0))
-    n_workers = max(1, min(4, os.cpu_count() or 1))
+    return cands, wl, cfg, None            # None -> N_REFINE / len(cands)
+
+
+def default_checkpoint(quick: bool, shard: Tuple[int, int]) -> Path:
+    tag = "table1_quick" if quick else "table1_dse"
+    si, sn = shard
+    suffix = f".shard{si}of{sn}" if sn > 1 else ""
+    return RESULTS / f"{tag}{suffix}.ckpt.jsonl"
+
+
+def _run(quick: bool = False, shard: Tuple[int, int] = (0, 1),
+         checkpoint: Optional[Path] = None, force: bool = False,
+         n_workers: Optional[int] = None) -> Dict:
+    cands, workloads, cfg, keep = _setup(quick)
+    ckpt = Path(checkpoint) if checkpoint else default_checkpoint(quick, shard)
+    if force and ckpt.exists():
+        # the sweep fingerprint versions cfg+workloads, not the cost model:
+        # a forced re-measure must not replay checkpointed numbers
+        ckpt.unlink()
+    if keep is None:
+        keep = N_REFINE / len(cands)
+    if n_workers is None:
+        n_workers = max(1, min(4, os.cpu_count() or 1))
+    si, sn = shard
+    print(f"[table1] {len(cands)} candidates "
+          f"({'quick' if quick else 'trimmed Table-I'} grid), "
+          f"shard {si}/{sn}, checkpoint {ckpt}")
     RESULTS.mkdir(exist_ok=True)
     with ExplorationEngine(workloads, cfg, n_workers=n_workers,
                            checkpoint=ckpt, progress=True) as eng:
-        refined = eng.run(cands, use_sa=True,
-                          screen_keep=N_REFINE / len(cands))
+        refined = eng.run(cands, use_sa=True, screen_keep=keep, shard=shard)
         screen = eng.last_screen or []
-    best = refined[0]
+    # a shard can legitimately own zero of the screened-kept candidates;
+    # its contribution is then just the (empty) checkpoint
+    best = refined[0] if refined else None
     frontier = pareto_frontier(refined)
     return {
         "n_candidates": len(cands),
         "n_workers": n_workers,
+        "shard": f"{si}/{sn}",
+        "quick": quick,
         "screen_top5": [[p.arch.label(), p.objective] for p in screen[:5]],
-        "best_arch": best.arch.label(),
-        "best": {"mc": best.mc, "E": best.energy_j, "D": best.delay_s,
-                 "objective": best.objective},
-        "best_params": {
+        "best_arch": best.arch.label() if best else None,
+        "best": ({"mc": best.mc, "E": best.energy_j, "D": best.delay_s,
+                  "objective": best.objective} if best else None),
+        "best_params": ({
             "chiplets": best.arch.n_chiplets, "cores": best.arch.n_cores,
             "dram_bw": best.arch.dram_bw, "noc_bw": best.arch.noc_bw,
             "d2d_bw": best.arch.d2d_bw, "glb_kb": best.arch.glb_kb,
-            "macs": best.arch.macs_per_core},
+            "macs": best.arch.macs_per_core} if best else None),
         "refined": [[p.arch.label(), p.objective] for p in refined],
         "pareto_mc_e_d": [[p.arch.label(), p.mc, p.energy_j, p.delay_s]
                           for p in frontier],
     }
 
 
+def _check_expected(data: Dict, expect_path: str) -> None:
+    """Assert this run's best/Pareto set is bit-identical to a previous
+    run's JSON output (the CI merge job's merged-vs-fresh comparison).
+    A normalizing JSON round-trip makes fresh floats comparable to loaded
+    ones (repr round-trips doubles exactly)."""
+    expect = json.loads(Path(expect_path).read_text())
+    got = json.loads(json.dumps(data))
+    mismatches = [k for k in ("best_arch", "best", "refined", "pareto_mc_e_d")
+                  if got[k] != expect[k]]
+    if mismatches:
+        for k in mismatches:
+            print(f"[table1] MISMATCH {k}:\n  got      {got[k]}\n"
+                  f"  expected {expect[k]}")
+        raise SystemExit(f"[table1] run diverges from {expect_path} "
+                         f"on {mismatches}")
+    print(f"[table1] bit-identical to {expect_path} "
+          "(best, refined set, Pareto frontier)")
+
+
 def main(force: bool = False) -> Dict:
-    data = cached("table1_dse", lambda: _run(force), force)
+    """Programmatic entry (benchmarks/run.py): cached full-grid sweep."""
+    data = cached("table1_dse", lambda: _run(force=force), force)
     bp = data["best_params"]
     print(f"[table1] best 72-TOPS arch: {data['best_arch']} "
           f"(paper: (2, 36, 144GB/s, 32GB/s, 16GB/s, 2MB, 1024))")
@@ -83,5 +153,57 @@ def main(force: bool = False) -> Dict:
     return data
 
 
+def cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny grid + short SA, sized for a CI matrix job")
+    ap.add_argument("--shard", default="0/1", metavar="i/n",
+                    help="evaluate only candidates with index %% n == i")
+    ap.add_argument("--checkpoint", default=None,
+                    help="sweep checkpoint path (default derives from "
+                    "--quick/--shard); with --merge: the merge output")
+    ap.add_argument("--merge", nargs="+", metavar="SHARD.jsonl",
+                    help="merge shard checkpoints into --checkpoint and exit")
+    ap.add_argument("--out", default=None,
+                    help="write the run's result JSON here (bypasses the "
+                    "bench_table1_dse.json cache)")
+    ap.add_argument("--expect", default=None,
+                    help="assert best/refined/Pareto match this result JSON")
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.merge:
+        if not args.checkpoint:
+            raise SystemExit("--merge needs --checkpoint for the output")
+        merge_checkpoints(args.merge, out=args.checkpoint)
+        return
+
+    shard = parse_shard_spec(args.shard)
+    if args.quick or shard != (0, 1) or args.out or args.checkpoint:
+        data = _run(quick=args.quick, shard=shard,
+                    checkpoint=args.checkpoint, force=args.force,
+                    n_workers=args.workers)
+        if data["best"] is not None:
+            print(f"[table1] shard best: {data['best_arch']} "
+                  f"obj={data['best']['objective']:.3e} "
+                  f"({len(data['refined'])} refined, "
+                  f"{len(data['pareto_mc_e_d'])} Pareto)")
+        else:
+            print("[table1] shard owned no screened-kept candidates "
+                  "(checkpoint written; nothing to refine)")
+        if args.out:
+            out = Path(args.out)
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(data, indent=1, default=float))
+            print(f"[table1] results -> {out}")
+        if args.expect:
+            _check_expected(data, args.expect)
+    else:
+        data = main(force=args.force)
+        if args.expect:
+            _check_expected(data, args.expect)
+
+
 if __name__ == "__main__":
-    main()
+    cli()

@@ -1,10 +1,13 @@
 """Architecture x Mapping co-exploration (paper Sec. V-A, Table I).
 
-Enumerate architecture candidates exhaustively; for each candidate run the
-mapping engine (DP graph partition + SA LP-SPM) on every workload; score
-``MC^alpha * E^beta * D^gamma`` with geometric-mean E and D across workloads.
-Supports joint DSE across several compute-power targets built from one
-chiplet (paper Sec. VII-B).
+Enumerate architecture candidates exhaustively; run the mapping engine
+(DP graph partition + SA LP-SPM) once per (candidate, workload) **task**
+— the unit of work the exploration engine fans out and checkpoints —
+then reduce geometric-mean E and D across workloads and score
+``MC^alpha * E^beta * D^gamma`` (:func:`reduce_tasks`).  Supports joint
+DSE across several compute-power targets built from one chiplet (paper
+Sec. VII-B) and sharded sweeps merged via
+``explore.merge_checkpoints``.
 """
 
 from __future__ import annotations
@@ -53,6 +56,15 @@ class DSEConfig:
     keep_mappings: bool = False
 
 
+@dataclass
+class TaskResult:
+    """Result of one (candidate, workload) task — the engine's unit of
+    work and the payload of one schema-v2 checkpoint record."""
+    energy_j: float
+    delay_s: float
+    mapping: Optional[Mapping] = None
+
+
 def grid_candidates(tops: float,
                     mac_options: Sequence[int] = (512, 1024, 2048, 4096),
                     cut_options: Sequence[int] = (1, 2, 3, 6),
@@ -88,40 +100,52 @@ def grid_candidates(tops: float,
     return out
 
 
-def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
-                       cfg: DSEConfig, use_sa: bool = True,
-                       seed: Optional[int] = None) -> DSEPoint:
-    """Score one architecture over all workloads.
+def evaluate_task(arch: ArchConfig, g: Graph, cfg: DSEConfig,
+                  use_sa: bool = True,
+                  seed: Optional[int] = None) -> TaskResult:
+    """Score one (architecture, workload) pair — the engine's unit of work.
 
-    ``seed`` overrides ``cfg.sa.seed`` for this candidate's SA chains; the
-    engine passes a per-candidate seed derived from the candidate index so
-    serial and parallel sweeps are bit-identical.
+    ``seed`` overrides ``cfg.sa.seed`` for this task's SA chains; the
+    engine passes a per-task seed derived from ``(cfg.sa.seed, candidate
+    index, workload index)`` so serial, parallel and sharded sweeps are
+    bit-identical.
     """
     sa_cfg = cfg.sa if seed is None else replace(cfg.sa, seed=seed)
+    groups = partition_graph(g, arch, cfg.batch)
+    # per-process LRU registry: re-scoring this (arch, graph) soon after
+    # (small screen-then-refine sweeps, same-arch loops) reuses the
+    # analyzer + GroupEval cache; within this call, SA chains and the
+    # final exact re-evaluation share ev by argument passing
+    ev = evaluator_for(arch, g)
+    if use_sa:
+        res = sa_optimize(g, arch, groups, cfg.batch, sa_cfg, evaluator=ev)
+        return TaskResult(energy_j=res.energy_j, delay_s=res.delay_s,
+                          mapping=res.mapping)
+    mapping = tangram_map(groups, g, arch)
+    r = ev.evaluate(mapping, cfg.batch)
+    return TaskResult(energy_j=r.energy_j, delay_s=r.delay_s, mapping=mapping)
+
+
+def reduce_tasks(arch: ArchConfig, cfg: DSEConfig,
+                 task_results: Dict[str, TaskResult]) -> DSEPoint:
+    """Geometric-mean reduction of per-workload task results into one
+    scored :class:`DSEPoint` (paper's ``MC^a * E^b * D^g`` objective).
+
+    ``task_results`` must iterate in a deterministic workload order (the
+    engine uses sorted names) — the log-domain accumulation is float
+    arithmetic, so the order is part of the bit-identity contract.
+    """
     mc = evaluate_mc(arch).total
     logE = logD = 0.0
     per: Dict[str, Tuple[float, float]] = {}
     maps: Dict[str, Mapping] = {}
-    for name, g in workloads.items():
-        groups = partition_graph(g, arch, cfg.batch)
-        # per-process LRU registry: re-scoring this (arch, graph) soon after
-        # (small screen-then-refine sweeps, same-arch loops) reuses the
-        # analyzer + GroupEval cache; within this call, SA chains and the
-        # final exact re-evaluation share ev by argument passing
-        ev = evaluator_for(arch, g)
-        if use_sa:
-            res = sa_optimize(g, arch, groups, cfg.batch, sa_cfg, evaluator=ev)
-            E, D, mapping = res.energy_j, res.delay_s, res.mapping
-        else:
-            mapping = tangram_map(groups, g, arch)
-            r = ev.evaluate(mapping, cfg.batch)
-            E, D = r.energy_j, r.delay_s
-        per[name] = (E, D)
-        if cfg.keep_mappings:
-            maps[name] = mapping
-        logE += math.log(E)
-        logD += math.log(D)
-    n = max(1, len(workloads))
+    for name, tr in task_results.items():
+        per[name] = (tr.energy_j, tr.delay_s)
+        if cfg.keep_mappings and tr.mapping is not None:
+            maps[name] = tr.mapping
+        logE += math.log(tr.energy_j)
+        logD += math.log(tr.delay_s)
+    n = max(1, len(task_results))
     E = math.exp(logE / n)
     D = math.exp(logD / n)
     obj = (mc ** cfg.alpha) * (E ** cfg.beta) * (D ** cfg.gamma)
@@ -129,25 +153,58 @@ def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
                     per_workload=per, mappings=maps)
 
 
+def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
+                       cfg: DSEConfig, use_sa: bool = True,
+                       seed: Optional[int] = None,
+                       cand_idx: Optional[int] = None) -> DSEPoint:
+    """Score one architecture over all workloads (sorted-name order).
+
+    Standalone convenience over :func:`evaluate_task` +
+    :func:`reduce_tasks` (the engine fans the tasks out itself):
+
+    * ``seed`` — one SA seed shared by every workload (the pre-task-model
+      behavior, kept for fig6/fig8-style single-candidate probes);
+    * ``cand_idx`` — derive a per-(candidate, workload) seed from
+      ``(cfg.sa.seed, cand_idx, workload index)``; matches bit-for-bit
+      what ``run_dse`` computes for the candidate at that index.
+    """
+    if seed is not None and cand_idx is not None:
+        raise ValueError("pass either seed= or cand_idx=, not both")
+    results: Dict[str, TaskResult] = {}
+    for wi, name in enumerate(sorted(workloads)):
+        task_seed = seed
+        if cand_idx is not None:
+            task_seed = _explore.derive_task_seed(cfg.sa.seed, cand_idx, wi)
+        results[name] = evaluate_task(arch, workloads[name], cfg,
+                                      use_sa=use_sa, seed=task_seed)
+    return reduce_tasks(arch, cfg, results)
+
+
 def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
             cfg: DSEConfig, use_sa: bool = True, progress: bool = False,
             n_workers: int = 1, screen_keep: float = 1.0,
             checkpoint: Union[str, Path, None] = None,
+            shard: Tuple[int, int] = (0, 1),
             mp_context: str = "spawn") -> List[DSEPoint]:
     """Sweep ``candidates``; thin wrapper over the exploration engine.
 
-    * ``n_workers > 1`` fans candidates out over worker processes; results
-      are bit-identical to the serial path (per-candidate seeds derive from
-      the candidate index, not from scheduling).
+    * ``n_workers > 1`` fans (candidate x workload) tasks out over worker
+      processes; results are bit-identical to the serial path (per-task
+      seeds derive from the candidate/workload indices, not scheduling).
     * ``screen_keep < 1.0`` first scores every candidate with the cheap
       T-Map pass and runs full SA only on the best fraction.
-    * ``checkpoint`` names a JSON-lines file: completed candidates are
-      skipped on re-run (resume after a crash / interrupted sweep).
+    * ``checkpoint`` names a JSON-lines file: completed tasks are skipped
+      on re-run (resume after a crash / interrupted sweep).
+    * ``shard=(i, n)`` evaluates only candidates with ``index % n == i``;
+      give each shard its own checkpoint and reconstruct the full sweep
+      with ``explore.merge_checkpoints`` — the merged result is
+      bit-identical to an unsharded run.
     """
     with _explore.ExplorationEngine(workloads, cfg, n_workers=n_workers,
                                     checkpoint=checkpoint, progress=progress,
                                     mp_context=mp_context) as eng:
-        return eng.run(candidates, use_sa=use_sa, screen_keep=screen_keep)
+        return eng.run(candidates, use_sa=use_sa, screen_keep=screen_keep,
+                       shard=shard)
 
 
 def scaled_arch(base: ArchConfig, s: int) -> ArchConfig:

@@ -5,14 +5,24 @@ candidate SA mapping runs — dominate Gemini's co-exploration wall time, not
 the cost model.  This module owns everything *around* a candidate
 evaluation:
 
-* **Parallel DSE** — :class:`ExplorationEngine` fans candidates out over a
-  ``ProcessPoolExecutor``.  Workload graphs and the ``DSEConfig`` are
-  pickled once per worker (pool initializer); each worker then builds its
-  own per-candidate ``CachedEvaluator`` (the GroupEval cache is pure
-  memoization, so cache state never changes values — see DESIGN.md).
-  Per-candidate SA seeds derive deterministically from
-  ``(cfg.sa.seed, candidate index)``, so ``n_workers=1`` and
-  ``n_workers=8`` produce bit-identical ``DSEPoint`` lists.
+* **(candidate x workload) task fan-out** — the engine's unit of work is
+  one ``(candidate, workload)`` pair, not one candidate.
+  :class:`ExplorationEngine` fans tasks out over a ``ProcessPoolExecutor``
+  (workload graphs and the ``DSEConfig`` are pickled once per worker via
+  the pool initializer); the executor's queue gives natural work stealing,
+  so a candidate whose SA finishes early frees its worker for another
+  candidate's remaining workloads.  Per-task SA seeds derive
+  deterministically from ``(cfg.sa.seed, candidate index, workload
+  index)``, so any worker count, any completion order and any sharding
+  produce bit-identical ``DSEPoint`` lists.  Per-candidate geometric means
+  are reduced in the parent (:func:`repro.core.dse.reduce_tasks`).
+* **Sharded sweeps** — ``run(..., shard=(i, n))`` evaluates only the
+  candidates with ``index % n == i`` (after the screening stage, which is
+  deterministic and therefore replicated per shard), each shard writing an
+  independent checkpoint; :func:`merge_checkpoints` reconstructs the full
+  sweep from the shard artifacts (fingerprint-checked, last-wins on
+  duplicate keys, corrupt shards set aside).  This is what lets a sweep
+  span CI matrix jobs or multiple hosts.
 * **Two-stage screening** — a cheap T-Map pass (``tangram_map``, no SA)
   scores every candidate; only the top ``screen_keep`` fraction proceeds
   to full SA.  ``screen_keep=1.0`` (default) reproduces the exhaustive
@@ -21,10 +31,13 @@ evaluation:
   ``cfg.n_chains`` chains on a geometric temperature ladder with periodic
   Metropolis swaps of adjacent chains' states, all sharing one
   content-addressed evaluator cache.  ``sa_optimize`` dispatches here for
-  ``n_chains > 1``.
+  ``n_chains > 1`` (and bumps the degenerate ``n_chains=2`` to 3).
 * **Sweep artifacts** — :class:`ResumableSweep` (append-only JSON-lines
-  checkpoint, skip-on-resume, crash-tolerant) and
-  :func:`pareto_frontier` over (MC, E, D).
+  checkpoint, schema v2: one record per task, with transparent migration
+  of schema-v1 per-candidate records), an opt-in LMS mapping
+  (de)serializer (:func:`mapping_to_jsonable`) so ``keep_mappings``
+  sweeps survive resume/merge, and :func:`pareto_frontier` over
+  (MC, E, D).
 """
 
 from __future__ import annotations
@@ -32,23 +45,26 @@ from __future__ import annotations
 import json
 import math
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
+from .encoding import LMS, MS
 from .evaluator import CachedEvaluator, Evaluator
 from .hw import TECH_12NM, ArchConfig
-from .sa import (Mapping, SAChain, SAConfig, SAResult, group_draw_cdf)
+from .sa import Mapping, SAChain, SAConfig, SAResult, group_draw_cdf
 from .workload import Graph, LayerGroup
 
 # resolved lazily through the module so tests can monkeypatch
-# dse.evaluate_candidate and observe the engine's serial path
+# dse.evaluate_task and observe the engine's serial path
 from . import dse as _dse
 
 
 # ---------------------------------------------------------------------------
-# Deterministic per-candidate seeds
+# Deterministic per-candidate / per-task seeds
 # ---------------------------------------------------------------------------
 
 def derive_seed(base_seed: int, index: int) -> int:
@@ -61,6 +77,35 @@ def derive_seed(base_seed: int, index: int) -> int:
     """
     ss = np.random.SeedSequence([abs(int(base_seed)), int(index)])
     return int(ss.generate_state(1, np.uint32)[0])
+
+
+def derive_task_seed(base_seed: int, cand_idx: int, wl_idx: int) -> int:
+    """Per-(candidate, workload) task seed — the engine's unit of work.
+
+    Workload index 0 reduces to :func:`derive_seed`, so single-workload
+    sweeps (and workload 0 of multi-workload sweeps) keep the exact seeds
+    of the per-candidate schema — which is what makes schema-v1 checkpoint
+    records reusable after migration.  Later workloads append their index
+    to the ``SeedSequence`` entropy key, giving every task an independent
+    stream regardless of worker count, sharding or completion order.
+    """
+    if wl_idx == 0:
+        return derive_seed(base_seed, cand_idx)
+    ss = np.random.SeedSequence(
+        [abs(int(base_seed)), int(cand_idx), int(wl_idx)])
+    return int(ss.generate_state(1, np.uint32)[0])
+
+
+def parse_shard_spec(spec: str) -> Tuple[int, int]:
+    """Parse an ``"i/n"`` shard argument into a validated ``(i, n)``."""
+    try:
+        i_s, n_s = spec.split("/")
+        i, n = int(i_s), int(n_s)
+    except ValueError:
+        raise ValueError(f"shard spec {spec!r} is not of the form i/n")
+    if n < 1 or not 0 <= i < n:
+        raise ValueError(f"shard spec {spec!r} needs 0 <= i < n")
+    return i, n
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +140,8 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
 
     Note ``n_chains=2`` has a one-chain ladder and therefore no swaps —
     it degenerates to two independent seeds plus elitism (the pre-refactor
-    restart behavior).  Tempering proper needs ``n_chains >= 3``.
+    restart behavior).  Tempering proper needs ``n_chains >= 3``;
+    ``sa_optimize`` warns and substitutes 3 when handed 2.
     """
     ev = evaluator or CachedEvaluator(arch, g)
     cum_w = group_draw_cdf(groups, arch.n_cores)
@@ -133,7 +179,7 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
 
 
 # ---------------------------------------------------------------------------
-# DSEPoint / ArchConfig <-> JSON (checkpoint records)
+# ArchConfig <-> JSON (checkpoint records)
 # ---------------------------------------------------------------------------
 
 _TECHS = {TECH_12NM.name: TECH_12NM}
@@ -189,19 +235,93 @@ def candidate_key(arch: ArchConfig) -> str:
                     f"{f}={d[f]}" for f in (*_ARCH_FIELDS, "tech"))
 
 
-def point_to_dict(pt: "_dse.DSEPoint") -> Dict[str, Any]:
-    return {"arch": arch_to_dict(pt.arch), "mc": pt.mc,
-            "energy_j": pt.energy_j, "delay_s": pt.delay_s,
-            "objective": pt.objective,
-            "per_workload": {k: list(v) for k, v in pt.per_workload.items()}}
+def task_checkpoint_key(arch: ArchConfig, workload: str) -> str:
+    """Checkpoint key of one (candidate, workload) task (schema v2)."""
+    return f"{candidate_key(arch)}|wl={workload}"
 
 
-def point_from_dict(d: Dict[str, Any]) -> "_dse.DSEPoint":
-    # mappings are not serialized: a resumed point carries metrics only
-    return _dse.DSEPoint(
-        arch=arch_from_dict(d["arch"]), mc=d["mc"], energy_j=d["energy_j"],
-        delay_s=d["delay_s"], objective=d["objective"],
-        per_workload={k: (v[0], v[1]) for k, v in d["per_workload"].items()})
+# ---------------------------------------------------------------------------
+# LMS mapping <-> JSON (opt-in; checkpointed when cfg.keep_mappings)
+# ---------------------------------------------------------------------------
+
+def mapping_to_jsonable(mapping: Mapping) -> List[Dict[str, Any]]:
+    """Serialize a full LP-SPM mapping (list of (LayerGroup, LMS)) to plain
+    JSON types.  Inverse of :func:`mapping_from_jsonable`; round-trips
+    exactly (all fields are ints/strings)."""
+    out: List[Dict[str, Any]] = []
+    for grp, lms in mapping:
+        out.append({
+            "group": {"names": list(grp.names),
+                      "batch_unit": int(grp.batch_unit)},
+            "lms": {name: {"part": list(ms.part), "cg": list(ms.cg),
+                           "fd": list(ms.fd)}
+                    for name, ms in lms.ms.items()}})
+    return out
+
+
+def mapping_from_jsonable(data: Sequence[Dict[str, Any]]) -> Mapping:
+    """Rebuild a mapping from :func:`mapping_to_jsonable` output.
+
+    ``MS.__post_init__`` re-validates the structural invariants (Part
+    product == |CG|, no duplicate cores), so a hand-edited or damaged
+    record raises instead of producing a silently-wrong mapping.
+    """
+    mapping: Mapping = []
+    for entry in data:
+        grp = LayerGroup(names=tuple(entry["group"]["names"]),
+                         batch_unit=int(entry["group"]["batch_unit"]))
+        ms = {name: MS(part=tuple(int(v) for v in m["part"]),
+                       cg=tuple(int(v) for v in m["cg"]),
+                       fd=tuple(int(v) for v in m["fd"]))
+              for name, m in entry["lms"].items()}
+        mapping.append((grp, LMS(ms=ms)))
+    return mapping
+
+
+def task_to_dict(tr: "_dse.TaskResult", arch: ArchConfig, workload: str,
+                 seed: int, keep_mapping: bool) -> Dict[str, Any]:
+    """Schema-v2 checkpoint record of one completed task."""
+    d: Dict[str, Any] = {"seed": seed, "workload": workload,
+                         "arch": arch_to_dict(arch),
+                         "energy_j": tr.energy_j, "delay_s": tr.delay_s}
+    if keep_mapping and tr.mapping is not None:
+        d["mapping"] = mapping_to_jsonable(tr.mapping)
+    return d
+
+
+def task_from_dict(d: Dict[str, Any]) -> "_dse.TaskResult":
+    mapping = (mapping_from_jsonable(d["mapping"])
+               if "mapping" in d else None)
+    return _dse.TaskResult(energy_j=float(d["energy_j"]),
+                           delay_s=float(d["delay_s"]), mapping=mapping)
+
+
+def migrate_v1_record(key: str, rec: Dict[str, Any]
+                      ) -> List[Tuple[str, Dict[str, Any]]]:
+    """Split a schema-v1 per-candidate record into schema-v2 task records.
+
+    v1 stored one record per candidate (keyed ``candidate_key``) with a
+    ``per_workload`` map and a single shared SA seed.  Each workload's
+    (E, D) becomes its own task record carrying that seed; on resume the
+    engine reuses a record only when its seed matches the v2 task seed —
+    true for workload 0 by construction (see :func:`derive_task_seed`),
+    so single-workload v1 sweeps resume in full, while extra workloads of
+    multi-workload sweeps recompute under their now-independent seeds.
+    Mappings were never serialized in v1, so migrated records are
+    metrics-only.
+    """
+    out: List[Tuple[str, Dict[str, Any]]] = []
+    per = rec.get("per_workload") or {}
+    for name in sorted(per):
+        ed = per[name]
+        # v1 ran every workload under the one candidate seed, so that seed
+        # is the true provenance of each split record; the resume-time seed
+        # gate then reuses a record exactly when v2 derives the same seed
+        out.append((f"{key}|wl={name}",
+                    {"seed": rec.get("seed"),
+                     "workload": name, "arch": rec.get("arch"),
+                     "energy_j": ed[0], "delay_s": ed[1]}))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -216,15 +336,23 @@ class ResumableSweep:
     configuration (mismatch discards the stale file).  A truncated trailing
     line (process killed mid-write) is tolerated and dropped.  Duplicate
     keys are last-wins, so a forced re-run simply appends an overriding
-    record.  Used by ``run_dse(..., checkpoint=...)`` and by the hillclimb
-    driver (``launch/hillclimb.py``).
+    record.  ``legacy`` maps superseded fingerprints to record-migration
+    functions ``(key, rec) -> [(new_key, new_rec), ...]``: a file written
+    under an old schema is converted in memory and rewritten atomically
+    under the current fingerprint instead of being discarded.  Used by
+    ``run_dse(..., checkpoint=...)`` and by the hillclimb driver
+    (``launch/hillclimb.py``).
     """
 
     def __init__(self, path: Union[str, Path],
                  config_fingerprint: Optional[str] = None,
-                 resume: bool = True):
+                 resume: bool = True,
+                 legacy: Optional[Dict[str, Callable[
+                     [str, Dict[str, Any]],
+                     Iterable[Tuple[str, Dict[str, Any]]]]]] = None):
         self.path = Path(path)
         self.fingerprint = config_fingerprint
+        self._legacy = legacy or {}
         self._records: Dict[str, Dict[str, Any]] = {}
         fresh = True
         if self.path.exists():
@@ -263,6 +391,7 @@ class ResumableSweep:
         inst = cls.__new__(cls)
         inst.path = Path(path)
         inst.fingerprint = None
+        inst._legacy = {}
         inst._records = {}
         if inst.path.exists():
             inst._load(readonly=True)
@@ -274,6 +403,7 @@ class ResumableSweep:
         lines = text.splitlines()
         valid: List[str] = []
         saw_header = False
+        migrate = None
         for i, line in enumerate(lines):
             if not line.strip():
                 continue
@@ -291,6 +421,11 @@ class ResumableSweep:
             if "_config" in rec:
                 if self.fingerprint is not None \
                         and rec["_config"] != self.fingerprint:
+                    if rec["_config"] in self._legacy:
+                        # superseded schema: convert records, rewrite below
+                        migrate = self._legacy[rec["_config"]]
+                        saw_header = True
+                        continue
                     print(f"[sweep] {self.path}: config changed; "
                           "discarding checkpoint")
                     return False
@@ -309,6 +444,17 @@ class ResumableSweep:
                   "discarding checkpoint")
             self._records.clear()
             return False
+        if migrate is not None and not readonly:
+            old = self._records
+            self._records = {}
+            for key, rec in old.items():
+                for k2, r2 in migrate(key, rec):
+                    self._records[k2] = r2
+            print(f"[sweep] {self.path}: migrated {len(old)} legacy "
+                  f"records -> {len(self._records)} under the current "
+                  "schema")
+            self._rewrite()
+            return True
         # a killed-mid-write trailing fragment (or missing final newline)
         # would merge with the next append — repair the file first;
         # atomically (temp + replace), so a second kill mid-repair cannot
@@ -319,6 +465,16 @@ class ResumableSweep:
             tmp.write_text(repaired)
             tmp.replace(self.path)
         return True
+
+    def _rewrite(self) -> None:
+        """Atomically replace the file with the in-memory records."""
+        header = (json.dumps({"_config": self.fingerprint}) + "\n"
+                  if self.fingerprint is not None else "")
+        body = "".join(json.dumps({"_key": k, **r}, default=float) + "\n"
+                       for k, r in self._records.items())
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        tmp.write_text(header + body)
+        tmp.replace(self.path)
 
     def __contains__(self, key: str) -> bool:
         return key in self._records
@@ -337,6 +493,127 @@ class ResumableSweep:
 
     def as_dict(self) -> Dict[str, Dict[str, Any]]:
         return dict(self._records)
+
+
+# ---------------------------------------------------------------------------
+# Shard merging
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MergeReport:
+    """Outcome of :func:`merge_checkpoints`."""
+    fingerprint: Optional[str]
+    records: Dict[str, Dict[str, Any]]
+    merged: List[Path]                    # shards that contributed
+    skipped: List[Tuple[Path, str]]       # (path, reason) set aside
+    out: Optional[Path] = None
+
+    @property
+    def n_records(self) -> int:
+        return len(self.records)
+
+
+def _parse_checkpoint_shard(path: Path
+                            ) -> Tuple[Optional[str], Dict[str, Dict]]:
+    """Strict parse of one shard file: (fingerprint, ordered records).
+
+    A truncated *final* line (shard killed mid-write) is tolerated and
+    dropped, exactly as on resume; any other parse failure marks the whole
+    shard corrupt — a mid-file hole means unknown records were lost, and a
+    partial merge would silently present itself as complete.
+    """
+    text = path.read_text()
+    lines = text.splitlines()
+    fingerprint: Optional[str] = None
+    records: Dict[str, Dict] = {}
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                continue                      # killed mid-write: drop it
+            raise ValueError(f"corrupt line {i + 1}")
+        if "_config" in rec:
+            if fingerprint is not None and rec["_config"] != fingerprint:
+                raise ValueError("conflicting _config headers")
+            fingerprint = rec["_config"]
+            continue
+        key = rec.pop("_key", None)
+        if key is not None:
+            records[key] = rec                # in-file duplicates: last wins
+    return fingerprint, records
+
+
+def merge_checkpoints(shards: Sequence[Union[str, Path]],
+                      out: Union[str, Path, None] = None,
+                      expect_fingerprint: Optional[str] = None,
+                      verbose: bool = True) -> MergeReport:
+    """Merge per-shard :class:`ResumableSweep` checkpoints into one.
+
+    * every usable shard must carry the **same** config fingerprint (and
+      match ``expect_fingerprint`` when given) — a mismatch refuses the
+      whole merge rather than mixing incompatible sweeps;
+    * duplicate keys are **last-wins** in ``shards`` order (within a
+      shard, in line order), mirroring the sweep's own append semantics —
+      overlapping shard ranges are therefore safe;
+    * a corrupt or unreadable shard is **set aside** (skipped, reported in
+      ``MergeReport.skipped``) instead of poisoning the others; source
+      files are never modified.
+
+    With ``out`` set, the merged checkpoint is written atomically (with a
+    ``_merged_from`` provenance line) and is directly resumable:
+    ``run_dse(candidates, ..., checkpoint=out)`` reconstructs the full
+    sweep, recomputing only tasks no shard covered.
+    """
+    parsed: List[Tuple[Path, Optional[str], Dict[str, Dict]]] = []
+    skipped: List[Tuple[Path, str]] = []
+    for p in (Path(s) for s in shards):
+        try:
+            fp, recs = _parse_checkpoint_shard(p)
+        except (ValueError, OSError) as e:
+            if verbose:
+                print(f"[merge] {p}: {e}; shard set aside")
+            skipped.append((p, str(e)))
+            continue
+        parsed.append((p, fp, recs))
+    if not parsed:
+        raise ValueError(
+            f"merge_checkpoints: no usable shards among {list(shards)}")
+    fps = {fp for _, fp, _ in parsed}
+    if expect_fingerprint is not None and fps != {expect_fingerprint}:
+        raise ValueError(
+            f"merge_checkpoints: shard fingerprints {sorted(map(repr, fps))} "
+            f"!= expected {expect_fingerprint!r}")
+    if len(fps) > 1:
+        raise ValueError(
+            "merge_checkpoints: refusing to merge shards with mismatched "
+            f"fingerprints: {sorted(map(repr, fps))}")
+    fingerprint = next(iter(fps))
+    records: Dict[str, Dict] = {}
+    for _p, _fp, recs in parsed:
+        records.update(recs)                  # later shards win duplicates
+    report = MergeReport(fingerprint=fingerprint, records=records,
+                         merged=[p for p, _, _ in parsed], skipped=skipped)
+    if out is not None:
+        out = Path(out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        header = (json.dumps({"_config": fingerprint}) + "\n"
+                  if fingerprint is not None else "")
+        prov = json.dumps(
+            {"_merged_from": [p.name for p in report.merged]}) + "\n"
+        body = "".join(json.dumps({"_key": k, **r}, default=float) + "\n"
+                       for k, r in records.items())
+        tmp = out.with_name(out.name + ".tmp")
+        tmp.write_text(header + prov + body)
+        tmp.replace(out)
+        report.out = out
+    if verbose:
+        note = f" ({len(skipped)} shard(s) set aside)" if skipped else ""
+        print(f"[merge] {len(records)} records from {len(report.merged)} "
+              f"shard(s){' -> ' + str(out) if out is not None else ''}{note}")
+    return report
 
 
 # ---------------------------------------------------------------------------
@@ -379,25 +656,35 @@ def _worker_init(workloads: Dict[str, Graph], cfg: "_dse.DSEConfig") -> None:
     _WORKER_STATE["cfg"] = cfg
 
 
-def _worker_eval(task: Tuple[int, ArchConfig, int, bool]
-                 ) -> Tuple[int, "_dse.DSEPoint"]:
-    index, arch, seed, use_sa = task
-    pt = _dse.evaluate_candidate(arch, _WORKER_STATE["workloads"],
-                                 _WORKER_STATE["cfg"], use_sa=use_sa,
-                                 seed=seed)
-    return index, pt
+def _worker_eval(task: Tuple[int, int, ArchConfig, str, int, bool]
+                 ) -> Tuple[int, int, "_dse.TaskResult"]:
+    ci, wi, arch, wl_name, seed, use_sa = task
+    cfg = _WORKER_STATE["cfg"]
+    tr = _dse.evaluate_task(arch, _WORKER_STATE["workloads"][wl_name], cfg,
+                            use_sa=use_sa, seed=seed)
+    if not cfg.keep_mappings:
+        tr.mapping = None       # don't pickle mappings nobody asked for
+    return ci, wi, tr
 
 
 # ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 
+# a task is (cand_idx, wl_idx, arch, workload name, derived seed)
+_Task = Tuple[int, int, ArchConfig, str, int]
+
+
 class ExplorationEngine:
-    """Screened, parallel, resumable candidate evaluation.
+    """Screened, parallel, sharded, resumable (candidate x workload) sweeps.
 
     One engine instance owns (at most) one worker pool; ``screen()`` and
     ``run()`` share it, so the per-worker import + unpickle cost is paid
     once per sweep.  Use as a context manager (or call :meth:`close`).
+
+    Workloads are indexed in **sorted-name order** for seed derivation and
+    reduction, so results never depend on dict insertion order (shards
+    built by different drivers stay merge-compatible).
 
     ``mp_context`` defaults to ``"spawn"``: the parent process may hold JAX
     thread pools (fork-unsafe), and spawned workers import only the NumPy
@@ -408,6 +695,7 @@ class ExplorationEngine:
                  n_workers: int = 1, checkpoint: Union[str, Path, None] = None,
                  progress: bool = False, mp_context: str = "spawn"):
         self.workloads = dict(workloads)
+        self._wl_names = sorted(self.workloads)
         self.cfg = cfg
         self.n_workers = max(1, int(n_workers))
         self.checkpoint = checkpoint
@@ -444,90 +732,128 @@ class ExplorationEngine:
         return self._pool
 
     # -- fingerprint for checkpoint compatibility ----------------------
-    def _fingerprint(self, use_sa: bool) -> str:
+    def _fingerprint(self, use_sa: bool, schema: int = 2) -> str:
         c = self.cfg
         # workloads hash by *content*, not name: editing a graph while
-        # keeping its dict key must invalidate the checkpoint
-        wl = ",".join(f"{n}:{graph_fingerprint(g)}"
-                      for n, g in sorted(self.workloads.items()))
-        return (f"dse:v1:a{c.alpha:g}:b{c.beta:g}:g{c.gamma:g}:B{c.batch}:"
+        # keeping its dict key must invalidate the checkpoint.
+        # keep_mappings is deliberately NOT part of the fingerprint: a
+        # metrics-only sweep resumed with keep_mappings=True recomputes
+        # just the tasks whose records lack a mapping.
+        wl = ",".join(f"{n}:{graph_fingerprint(self.workloads[n])}"
+                      for n in self._wl_names)
+        return (f"dse:v{schema}:a{c.alpha:g}:b{c.beta:g}:g{c.gamma:g}:"
+                f"B{c.batch}:"
                 f"sa({c.sa.iters},{c.sa.t0:g},{c.sa.t_end:g},{c.sa.seed},"
                 f"{c.sa.beta:g},{c.sa.gamma:g},{c.sa.n_chains},"
                 f"{c.sa.swap_every},{c.sa.t_ladder:g}):sa={int(use_sa)}:"
                 f"wl={wl}")
 
+    # -- task construction / reduction ---------------------------------
+    def _tasks(self, indexed: Sequence[Tuple[int, ArchConfig]]
+               ) -> List[_Task]:
+        return [(ci, wi, arch, name,
+                 derive_task_seed(self.cfg.sa.seed, ci, wi))
+                for ci, arch in indexed
+                for wi, name in enumerate(self._wl_names)]
+
+    def _reduce(self, indexed: Sequence[Tuple[int, ArchConfig]],
+                results: Dict[Tuple[int, int], "_dse.TaskResult"]
+                ) -> List["_dse.DSEPoint"]:
+        pts = []
+        for ci, arch in indexed:
+            per = {name: results[(ci, wi)]
+                   for wi, name in enumerate(self._wl_names)}
+            pts.append(_dse.reduce_tasks(arch, self.cfg, per))
+        return pts
+
     # -- evaluation fan-out --------------------------------------------
-    def _map(self, tasks: List[Tuple[int, ArchConfig, int]], use_sa: bool,
-             checkpoint: Union[str, Path, None], stage: str,
-             ) -> List["_dse.DSEPoint"]:
-        """Evaluate ``(index, arch, seed)`` tasks; returns points in task
-        order regardless of completion order (determinism)."""
-        results: Dict[int, "_dse.DSEPoint"] = {}
+    def _map_tasks(self, tasks: List[_Task], use_sa: bool,
+                   checkpoint: Union[str, Path, None], stage: str,
+                   ) -> Dict[Tuple[int, int], "_dse.TaskResult"]:
+        """Evaluate tasks (any order); the returned dict is keyed
+        ``(cand_idx, wl_idx)``, so callers reduce deterministically
+        regardless of completion order."""
+        results: Dict[Tuple[int, int], "_dse.TaskResult"] = {}
+        keep = self.cfg.keep_mappings
         sweep: Optional[ResumableSweep] = None
         if checkpoint is not None:
-            sweep = ResumableSweep(checkpoint, self._fingerprint(use_sa))
-            for idx, arch, seed in tasks:
-                rec = sweep.get(candidate_key(arch))
-                # a record is only valid for the seed this sweep would use:
-                # editing the candidate grid shifts indices (and therefore
-                # derived seeds), and those candidates must recompute or
-                # resume would silently mix seeds (SA-less records are
+            fp = self._fingerprint(use_sa)
+            sweep = ResumableSweep(
+                checkpoint, fp,
+                legacy={self._fingerprint(use_sa, schema=1):
+                        migrate_v1_record})
+            n_nomap = 0
+            for ci, wi, arch, wl, seed in tasks:
+                rec = sweep.get(task_checkpoint_key(arch, wl))
+                if rec is None:
+                    continue
+                # a record is only valid for the seed this sweep would
+                # use: editing the candidate grid shifts indices (and
+                # therefore derived seeds), and those tasks must recompute
+                # or resume would silently mix seeds (SA-less records are
                 # seed-independent)
-                if rec is not None and (not use_sa
-                                        or rec.get("seed") == seed):
-                    try:
-                        results[idx] = point_from_dict(rec)
-                    except (KeyError, ValueError, TypeError) as e:
-                        print(f"[{stage}] checkpoint record for "
-                              f"{arch.label()} unusable ({e}); recomputing")
-            if results:
-                if self.cfg.keep_mappings:
-                    print(f"[{stage}] note: {len(results)} resumed points "
-                          "carry metrics only (mappings are not checkpointed)")
-                if self.progress:
-                    print(f"[{stage}] resumed {len(results)}/{len(tasks)} "
-                          f"candidates from {sweep.path}", flush=True)
-        pending = [t for t in tasks if t[0] not in results]
+                if use_sa and rec.get("seed") != seed:
+                    continue
+                if keep and "mapping" not in rec:
+                    n_nomap += 1        # metrics-only record, mapping asked
+                    continue
+                try:
+                    results[(ci, wi)] = task_from_dict(rec)
+                except (KeyError, ValueError, TypeError) as e:
+                    print(f"[{stage}] checkpoint record for "
+                          f"{arch.label()} x {wl} unusable ({e}); "
+                          "recomputing")
+            if n_nomap:
+                print(f"[{stage}] {n_nomap} checkpointed tasks lack "
+                      "serialized mappings (metrics-only records, "
+                      "keep_mappings sweep); recomputing them")
+            if results and self.progress:
+                print(f"[{stage}] resumed {len(results)}/{len(tasks)} "
+                      f"tasks from {sweep.path}", flush=True)
+        pending = [t for t in tasks if (t[0], t[1]) not in results]
         done_n = len(results)
 
-        seed_of = {idx: seed for idx, _arch, seed in tasks}
-
-        def _record(idx: int, arch: ArchConfig, pt: "_dse.DSEPoint") -> None:
+        def _record(ci: int, wi: int, arch: ArchConfig, wl: str, seed: int,
+                    tr: "_dse.TaskResult") -> None:
             nonlocal done_n
-            results[idx] = pt
+            results[(ci, wi)] = tr
             done_n += 1
             if sweep is not None:
-                sweep.add(candidate_key(arch),
-                          {"seed": seed_of[idx], **point_to_dict(pt)})
+                sweep.add(task_checkpoint_key(arch, wl),
+                          task_to_dict(tr, arch, wl, seed, keep))
             if self.progress:
                 print(f"[{stage} {done_n}/{len(tasks)}] {arch.label()} "
-                      f"MC=${pt.mc:.0f} E={pt.energy_j:.3e}J "
-                      f"D={pt.delay_s:.3e}s obj={pt.objective:.3e}",
+                      f"x {wl} E={tr.energy_j:.3e}J D={tr.delay_s:.3e}s",
                       flush=True)
 
         if self.n_workers <= 1 or len(pending) <= 1:
-            for idx, arch, seed in pending:
-                pt = _dse.evaluate_candidate(arch, self.workloads, self.cfg,
-                                             use_sa=use_sa, seed=seed)
-                _record(idx, arch, pt)
+            for ci, wi, arch, wl, seed in pending:
+                tr = _dse.evaluate_task(arch, self.workloads[wl], self.cfg,
+                                        use_sa=use_sa, seed=seed)
+                if not keep:
+                    # mirror the worker path: results live for the whole
+                    # sweep, so unrequested mappings must not accumulate
+                    tr.mapping = None
+                _record(ci, wi, arch, wl, seed, tr)
         else:
             pool = self._get_pool()
-            futs = {pool.submit(_worker_eval, (idx, arch, seed, use_sa)):
-                    (idx, arch) for idx, arch, seed in pending}
+            futs = {pool.submit(_worker_eval, (*t, use_sa)): t
+                    for t in pending}
             not_done = set(futs)
             try:
                 while not_done:
                     done, not_done = wait(not_done,
                                           return_when=FIRST_COMPLETED)
                     for fut in done:
-                        idx, pt = fut.result()
-                        _record(idx, futs[fut][1], pt)
+                        ci, wi, tr = fut.result()
+                        t = futs[fut]
+                        _record(ci, wi, t[2], t[3], t[4], tr)
             except BaseException:
                 # surface the failure now, not after the queue drains
                 for fut in not_done:
                     fut.cancel()
                 raise
-        return [results[idx] for idx, _arch, _seed in tasks]
+        return results
 
     # -- public API ----------------------------------------------------
     def map_archs(self, archs: Sequence[ArchConfig], use_sa: bool = True,
@@ -535,45 +861,66 @@ class ExplorationEngine:
         """Evaluate ``archs`` (parallel, deterministic), *preserving input
         order* — for callers that reduce positionally (``joint_reuse_dse``)
         rather than rank by objective."""
-        tasks = [(i, arch, derive_seed(self.cfg.sa.seed, i))
-                 for i, arch in enumerate(archs)]
-        return self._map(tasks, use_sa=use_sa, checkpoint=self.checkpoint,
-                         stage="map")
+        indexed = list(enumerate(archs))
+        results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
+                                  checkpoint=self.checkpoint, stage="map")
+        return self._reduce(indexed, results)
 
     def screen(self, candidates: Sequence[ArchConfig]
                ) -> List["_dse.DSEPoint"]:
         """T-Map-only scoring pass (no SA), sorted best-objective first."""
-        tasks = [(i, arch, derive_seed(self.cfg.sa.seed, i))
-                 for i, arch in enumerate(candidates)]
-        pts = self._map(tasks, use_sa=False, checkpoint=None, stage="screen")
-        return sorted(pts, key=lambda p: p.objective)
+        indexed = list(enumerate(candidates))
+        results = self._map_tasks(self._tasks(indexed), use_sa=False,
+                                  checkpoint=None, stage="screen")
+        return sorted(self._reduce(indexed, results),
+                      key=lambda p: p.objective)
 
     def run(self, candidates: Sequence[ArchConfig], use_sa: bool = True,
-            screen_keep: float = 1.0) -> List["_dse.DSEPoint"]:
-        """Full sweep: optional screening stage, then (parallel) evaluation.
+            screen_keep: float = 1.0, shard: Tuple[int, int] = (0, 1),
+            ) -> List["_dse.DSEPoint"]:
+        """Full sweep: optional screening stage, then (parallel) evaluation
+        of this shard's (candidate x workload) tasks.
 
-        Per-candidate seeds derive from the candidate's index in
-        ``candidates``, so results are independent of ``n_workers``,
-        completion order, screening of *other* candidates, and resume.
+        Per-task seeds derive from the candidate's index in ``candidates``
+        and the workload's sorted-name index, so results are independent of
+        ``n_workers``, completion order, screening of *other* candidates,
+        sharding and resume.
+
+        ``shard=(i, n)`` evaluates only the candidates with
+        ``index % n == i``.  The screening stage (deterministic, no SA)
+        runs over the FULL grid in every shard so all shards agree on the
+        global keep set — merging the n shard checkpoints and resuming is
+        then bit-identical to the unsharded sweep.
         """
         candidates = list(candidates)
-        tasks = [(i, arch, derive_seed(self.cfg.sa.seed, i))
-                 for i, arch in enumerate(candidates)]
+        si, sn = shard
+        if sn < 1 or not 0 <= si < sn:
+            raise ValueError(f"bad shard {si}/{sn}: need 0 <= i < n")
+        indexed = list(enumerate(candidates))
         self.last_screen = None
         if use_sa and screen_keep < 1.0 and len(candidates) > 1:
-            screen_pts = self._map(tasks, use_sa=False, checkpoint=None,
-                                   stage="screen")
-            order = sorted(range(len(tasks)),
+            screen_results = self._map_tasks(
+                self._tasks(indexed), use_sa=False, checkpoint=None,
+                stage="screen")
+            screen_pts = self._reduce(indexed, screen_results)
+            order = sorted(range(len(indexed)),
                            key=lambda i: screen_pts[i].objective)
             # epsilon guard: fraction-derived keeps like 6/n can float up
             # (6/187*187 == 6.000000000000001) and must not round to 7
-            keep = max(1, min(len(tasks),
-                              math.ceil(screen_keep * len(tasks) - 1e-9)))
+            keep = max(1, min(len(indexed),
+                              math.ceil(screen_keep * len(indexed) - 1e-9)))
             kept = sorted(order[:keep])
-            print(f"[explore] screening kept {keep}/{len(tasks)} candidates "
-                  f"(pruned {len(tasks) - keep})", flush=True)
+            print(f"[explore] screening kept {keep}/{len(indexed)} "
+                  f"candidates (pruned {len(indexed) - keep})", flush=True)
             self.last_screen = [screen_pts[i] for i in order]
-            tasks = [tasks[i] for i in kept]
-        pts = self._map(tasks, use_sa=use_sa, checkpoint=self.checkpoint,
-                        stage="dse")
-        return sorted(pts, key=lambda p: p.objective)
+            indexed = [indexed[i] for i in kept]
+        if sn > 1:
+            mine = [(ci, arch) for ci, arch in indexed if ci % sn == si]
+            print(f"[explore] shard {si}/{sn}: {len(mine)}/{len(indexed)} "
+                  f"candidates ({len(mine) * len(self._wl_names)} tasks)",
+                  flush=True)
+            indexed = mine
+        results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
+                                  checkpoint=self.checkpoint, stage="dse")
+        return sorted(self._reduce(indexed, results),
+                      key=lambda p: p.objective)

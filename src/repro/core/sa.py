@@ -21,6 +21,7 @@ reachable even though the stripe initialization uses every core.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -336,9 +337,22 @@ def sa_optimize(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
     replica-exchange SA (parallel tempering) over a temperature ladder with
     one shared content-addressed evaluator cache — see
     :func:`repro.core.explore.replica_exchange_sa`.
+
+    ``n_chains == 2`` is a degenerate ladder: chain 0 is the unswapped
+    reference, leaving a one-chain ladder with nothing to exchange with —
+    two independent seeds plus elitism, not tempering.  Asking for 2 warns
+    and runs the documented minimum useful ladder (3) instead.
     """
     if cfg.n_chains <= 1:
         return _sa_chain(g, arch, groups, total_batch, cfg, init, evaluator)
+    if cfg.n_chains == 2:
+        warnings.warn(
+            "SAConfig(n_chains=2) degenerates to independent seeds + "
+            "elitism (chain 0 is the unswapped reference, so the tempering "
+            "ladder has one chain and no swaps can occur); running "
+            "n_chains=3, the minimum useful ladder",
+            RuntimeWarning, stacklevel=2)
+        cfg = replace(cfg, n_chains=3)
     from .explore import replica_exchange_sa   # lazy: avoids import cycle
     return replica_exchange_sa(g, arch, groups, total_batch, cfg,
                                init=init, evaluator=evaluator)

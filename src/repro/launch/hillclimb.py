@@ -11,7 +11,10 @@ so EXPERIMENTS.md §Perf can show before/after per hypothesis.
 The sweep is resumable through the same append-only JSON-lines artifact
 the DSE checkpoints use (``repro.core.explore.ResumableSweep``):
 completed-ok cells are skipped on re-run, failed cells are retried, and a
-kill mid-measure loses at most the in-flight cell.
+kill mid-measure loses at most the in-flight cell.  ``--shard i/n`` runs
+only every n-th variant into a per-shard jsonl (parallel CI jobs /
+hosts); ``launch/report.py`` merges the shard artifacts back into one
+table via ``repro.core.explore.merge_checkpoints``.
 
   PYTHONPATH=src python -m repro.launch.hillclimb --cell \
       qwen1.5-110b/train_4k --variant baseline,no_fsdp ...
@@ -24,7 +27,7 @@ import traceback
 from pathlib import Path
 from typing import Dict
 
-from repro.core.explore import ResumableSweep
+from repro.core.explore import ResumableSweep, parse_shard_spec
 
 from .dryrun import run_cell
 
@@ -78,10 +81,14 @@ def main() -> None:
                     help="comma-separated variant names")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--out", default="results/hillclimb.jsonl")
+    ap.add_argument("--shard", default="0/1", metavar="i/n",
+                    help="run only variants with list-index %% n == i, "
+                    "into a .shardIofN.jsonl sibling of --out")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
     arch, shape = args.cell.split("/")
+    si, sn = parse_shard_spec(args.shard)
     # append-only sweep log; duplicate keys are last-wins, so --force simply
     # appends an overriding record without losing history
     out = Path(args.out)
@@ -91,8 +98,12 @@ def main() -> None:
         print(f"[hillclimb] --out {out} is the legacy dict format; "
               f"writing to {out.with_suffix('.jsonl')} instead")
         out = out.with_suffix(".jsonl")
+    if sn > 1:
+        # per-shard artifact: report.py merges the shard files with the
+        # base jsonl (last-wins), so shards never contend on one file
+        out = out.with_name(f"{out.stem}.shard{si}of{sn}{out.suffix}")
     legacy = out.with_suffix(".json")
-    migrate = legacy.exists() and not out.exists()
+    migrate = sn == 1 and legacy.exists() and not out.exists()
     sweep = ResumableSweep(out)
     if migrate:
         # one-time carry-over of pre-JSONL records so the before/after
@@ -101,7 +112,12 @@ def main() -> None:
             sweep.add(key, rec)
         print(f"[migrate] {len(sweep)} records from {legacy} -> {out}")
 
-    for vname in args.variant.split(","):
+    variants = [v for j, v in enumerate(args.variant.split(","))
+                if j % sn == si]
+    if sn > 1:
+        print(f"[hillclimb] shard {si}/{sn}: {len(variants)} variant(s) "
+              f"-> {out}")
+    for vname in variants:
         spec = VARIANTS[vname]
         key = f"{args.cell}|{args.mesh}|{vname}"
         prev = sweep.get(key)

@@ -57,9 +57,25 @@ def hillclimb_table(path: str = "results/hillclimb.jsonl") -> str:
     # merge legacy dict-format records under the JSONL ones, so "before"
     # rows recorded pre-migration stay in the comparison
     d = json.loads(legacy.read_text()) if legacy.exists() else {}
-    if p.exists():
-        from repro.core.explore import ResumableSweep
-        d.update(ResumableSweep.read(p).as_dict())  # read-only: never resets
+    # the base jsonl plus any per-shard siblings written by
+    # hillclimb --shard i/n, merged last-wins in name order (corrupt
+    # shards are set aside by merge_checkpoints, not fatal here)
+    shards = sorted(p.parent.glob(f"{p.stem}.shard*of*{p.suffix}"))
+    paths = ([p] if p.exists() else []) + shards
+    if paths:
+        from repro.core.explore import ResumableSweep, merge_checkpoints
+        try:
+            # in-memory, quiet: this function's output lands in tables
+            report = merge_checkpoints(paths, verbose=False)
+            d.update(report.records)
+            skipped = [p for p, _ in report.skipped]
+        except ValueError:              # no file usable / fps disagree
+            skipped = paths
+        # merge_checkpoints sets whole corrupt shards aside; a render-only
+        # consumer still wants every parseable line (the pre-shard
+        # behavior), so salvage set-aside files read-only
+        for p in skipped:
+            d.update(ResumableSweep.read(p).as_dict())
     if not d:
         return "(no hillclimb results yet)"
     out = ["| cell | variant | t_compute | t_memory | t_collective | "

@@ -153,18 +153,18 @@ def test_checkpoint_resume_skips_completed(tmp_path, monkeypatch):
     assert ck.exists()
 
     calls = []
-    real = dse_mod.evaluate_candidate
+    real = dse_mod.evaluate_task
 
     def counting(*a, **kw):
         calls.append(1)
         return real(*a, **kw)
 
-    monkeypatch.setattr(dse_mod, "evaluate_candidate", counting)
+    monkeypatch.setattr(dse_mod, "evaluate_task", counting)
     resumed = run_dse(cands, {"TF": g}, _cfg(), checkpoint=ck)
     assert not calls                       # everything came from the file
     assert [p.objective for p in resumed] == [p.objective for p in first]
 
-    # partial resume: drop the last record, only that candidate re-runs
+    # partial resume: drop the last record, only that task re-runs
     lines = ck.read_text().splitlines()
     ck.write_text("\n".join(lines[:-1]) + "\n")
     resumed2 = run_dse(cands, {"TF": g}, _cfg(), checkpoint=ck)

@@ -1,0 +1,454 @@
+"""Sharded sweeps + checkpoint merging: (candidate x workload) task model,
+shard/worker bit-identity, merge_checkpoints properties (last-wins,
+corrupt-shard set-aside, fingerprint refusal), LMS mapping serialization,
+schema-v1 -> v2 migration, and the n_chains=2 degeneracy fix."""
+
+import json
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import dse as dse_mod
+from repro.core.dse import (DSEConfig, evaluate_candidate, grid_candidates,
+                            run_dse)
+from repro.core.encoding import random_lms
+from repro.core.explore import (ExplorationEngine, ResumableSweep,
+                                arch_to_dict, candidate_key, derive_seed,
+                                derive_task_seed, mapping_from_jsonable,
+                                mapping_to_jsonable, merge_checkpoints,
+                                migrate_v1_record, pareto_frontier,
+                                parse_shard_spec)
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import simba_arch
+from repro.core.sa import SAConfig, sa_optimize
+from repro.core.workloads import transformer
+
+SET = settings(max_examples=25, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+def _tf_small(name="tf-s", seq=64):
+    return transformer(n_layers=2, d_model=128, d_ff=256, seq=seq, name=name)
+
+
+def _grid(n=6):
+    cands = grid_candidates(
+        72.0, mac_options=(512, 1024), cut_options=(1, 2),
+        dram_per_tops=(2.0,), noc_options=(16, 32), d2d_ratio=(0.5,),
+        glb_options=(1024, 2048))
+    assert len(cands) >= n
+    return cands[:n]
+
+
+def _cfg(iters=50, seed=3, **kw):
+    return DSEConfig(batch=8, sa=SAConfig(iters=iters, seed=seed), **kw)
+
+
+def _sig(points):
+    return [(p.arch, p.objective, p.energy_j, p.delay_s) for p in points]
+
+
+# ---------------------------------------------------------------------------
+# Task seeds
+# ---------------------------------------------------------------------------
+
+def test_task_seed_workload_zero_matches_candidate_seed():
+    """wl_idx=0 reduces to the v1 per-candidate seed — what makes migrated
+    single-workload checkpoints fully reusable."""
+    for base, ci in ((0, 0), (3, 7), (123, 41)):
+        assert derive_task_seed(base, ci, 0) == derive_seed(base, ci)
+
+
+def test_task_seeds_distinct_across_grid():
+    seeds = {derive_task_seed(0, ci, wi)
+             for ci in range(40) for wi in range(5)}
+    assert len(seeds) == 200
+    assert derive_task_seed(0, 1, 2) != derive_task_seed(0, 2, 1)
+
+
+def test_parse_shard_spec():
+    assert parse_shard_spec("0/1") == (0, 1)
+    assert parse_shard_spec("2/3") == (2, 3)
+    for bad in ("3/3", "-1/2", "1", "a/b", "1/0"):
+        with pytest.raises(ValueError):
+            parse_shard_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# Shard x worker bit-identity (the acceptance matrix)
+# ---------------------------------------------------------------------------
+
+def test_sharded_merged_sweep_bit_identical_across_workers(tmp_path):
+    """n_workers in {1,4} x shards in {1,3}: the merged+resumed sweep's
+    best-candidate metrics and Pareto frontier are bit-identical to the
+    serial unsharded run."""
+    g = _tf_small()
+    cands = _grid(6)
+    full = run_dse(cands, {"TF": g}, _cfg())            # serial, unsharded
+    for n_workers in (1, 4):
+        shard_paths = []
+        for i in range(3):
+            ck = tmp_path / f"w{n_workers}.shard{i}of3.jsonl"
+            part = run_dse(cands, {"TF": g}, _cfg(), n_workers=n_workers,
+                           shard=(i, 3), checkpoint=ck)
+            assert len(part) == 2               # 6 candidates, stride 3
+            shard_paths.append(ck)
+        merged = tmp_path / f"w{n_workers}.merged.jsonl"
+        report = merge_checkpoints(shard_paths, merged)
+        assert report.n_records == 6 and not report.skipped
+        pts = run_dse(cands, {"TF": g}, _cfg(), checkpoint=merged)
+        assert _sig(pts) == _sig(full)
+        assert _sig(pareto_frontier(pts)) == _sig(pareto_frontier(full))
+
+
+def test_multi_workload_task_fanout_and_sharding(tmp_path):
+    """Two workloads -> 2 tasks per candidate; parallel and sharded-merged
+    runs match serial, and the reduction matches evaluate_candidate."""
+    workloads = {"A": _tf_small("tf-a"), "B": _tf_small("tf-b", seq=96)}
+    cands = _grid(4)
+    cfg = _cfg()
+    serial = run_dse(cands, workloads, cfg)
+    assert all(set(p.per_workload) == {"A", "B"} for p in serial)
+    par = run_dse(cands, workloads, cfg, n_workers=2)
+    assert _sig(serial) == _sig(par)
+    # the standalone per-candidate API agrees with the engine's fan-out
+    by_arch = {p.arch: p for p in serial}
+    for ci, arch in enumerate(cands):
+        pt = evaluate_candidate(arch, workloads, cfg, cand_idx=ci)
+        assert (pt.objective, pt.energy_j, pt.delay_s) == \
+            (by_arch[arch].objective, by_arch[arch].energy_j,
+             by_arch[arch].delay_s)
+    # sharded across 2 shards, merged, resumed: bit-identical
+    shard_paths = []
+    for i in range(2):
+        ck = tmp_path / f"mw.shard{i}of2.jsonl"
+        run_dse(cands, workloads, cfg, shard=(i, 2), checkpoint=ck)
+        shard_paths.append(ck)
+    merged = tmp_path / "mw.merged.jsonl"
+    assert merge_checkpoints(shard_paths, merged).n_records == 8
+    pts = run_dse(cands, workloads, cfg, checkpoint=merged)
+    assert _sig(pts) == _sig(serial)
+
+
+def test_sharding_composes_with_screening(tmp_path):
+    """Screening is replicated per shard (deterministic), so the union of
+    shard results equals the screened unsharded run."""
+    g = _tf_small()
+    cands = _grid(6)
+    full = run_dse(cands, {"TF": g}, _cfg(), screen_keep=0.5)
+    parts = []
+    for i in range(3):
+        ck = tmp_path / f"scr.shard{i}of3.jsonl"
+        parts += run_dse(cands, {"TF": g}, _cfg(), screen_keep=0.5,
+                         shard=(i, 3), checkpoint=ck)
+    assert sorted(_sig(parts), key=repr) == sorted(_sig(full), key=repr)
+
+
+def test_bad_shard_spec_rejected():
+    g = _tf_small()
+    with pytest.raises(ValueError, match="bad shard"):
+        run_dse(_grid(2), {"TF": g}, _cfg(iters=10), shard=(2, 2))
+
+
+# ---------------------------------------------------------------------------
+# merge_checkpoints properties
+# ---------------------------------------------------------------------------
+
+def _write_shard(path: Path, fingerprint, records):
+    """records: iterable of (key, value) pairs, written in order."""
+    lines = []
+    if fingerprint is not None:
+        lines.append(json.dumps({"_config": fingerprint}))
+    for k, v in records:
+        lines.append(json.dumps({"_key": str(k), "x": v}))
+    path.write_text("".join(l + "\n" for l in lines))
+
+
+@SET
+@given(shards=st.lists(
+    st.lists(st.tuples(st.integers(0, 9), st.integers(0, 10_000)),
+             min_size=0, max_size=8),
+    min_size=1, max_size=4))
+def test_merge_last_wins_matches_sequential_update(shards):
+    """Disjoint or overlapping shards: merged records == a dict built by
+    updating in shard order (last-wins), regardless of overlap pattern."""
+    with tempfile.TemporaryDirectory() as td:
+        paths = []
+        expect = {}
+        for i, recs in enumerate(shards):
+            p = Path(td) / f"s{i}.jsonl"
+            _write_shard(p, "fp", recs)
+            paths.append(p)
+            for k, v in recs:
+                expect[str(k)] = {"x": v}
+        out = Path(td) / "merged.jsonl"
+        report = merge_checkpoints(paths, out)
+        assert report.records == expect
+        assert report.fingerprint == "fp" and not report.skipped
+        # the written file parses back to the same records
+        reread = ResumableSweep(out, config_fingerprint="fp")
+        assert reread.as_dict() == expect
+
+
+def test_merge_disjoint_and_overlapping_shards(tmp_path):
+    a = tmp_path / "a.jsonl"
+    b = tmp_path / "b.jsonl"
+    _write_shard(a, "fp", [("k1", 1), ("k2", 2)])
+    _write_shard(b, "fp", [("k2", 99), ("k3", 3)])   # overlaps a on k2
+    report = merge_checkpoints([a, b], tmp_path / "m.jsonl")
+    assert report.records == {"k1": {"x": 1}, "k2": {"x": 99},
+                              "k3": {"x": 3}}          # b wins k2
+
+
+def test_merge_corrupt_shard_set_aside(tmp_path):
+    """A mid-file corrupt shard is excluded; the others still merge.  A
+    truncated *trailing* line is tolerated within a shard."""
+    ok = tmp_path / "ok.jsonl"
+    bad = tmp_path / "bad.jsonl"
+    trunc = tmp_path / "trunc.jsonl"
+    missing = tmp_path / "missing.jsonl"
+    _write_shard(ok, "fp", [("a", 1)])
+    bad.write_text(json.dumps({"_config": "fp"}) + "\n{broken\n"
+                   + json.dumps({"_key": "b", "x": 2}) + "\n")
+    _write_shard(trunc, "fp", [("c", 3)])
+    with trunc.open("a") as f:
+        f.write('{"_key": "d", "x":')         # killed mid-write
+    report = merge_checkpoints([ok, bad, trunc, missing],
+                               tmp_path / "m.jsonl")
+    assert report.records == {"a": {"x": 1}, "c": {"x": 3}}
+    assert {p.name for p, _ in report.skipped} == {"bad.jsonl",
+                                                   "missing.jsonl"}
+    # source shards are never modified by a merge
+    assert "{broken" in bad.read_text()
+
+
+def test_merge_mismatched_fingerprints_refused(tmp_path):
+    a = tmp_path / "a.jsonl"
+    b = tmp_path / "b.jsonl"
+    _write_shard(a, "fp1", [("a", 1)])
+    _write_shard(b, "fp2", [("b", 2)])
+    with pytest.raises(ValueError, match="mismatched"):
+        merge_checkpoints([a, b], tmp_path / "m.jsonl")
+    assert not (tmp_path / "m.jsonl").exists()
+    with pytest.raises(ValueError, match="expected"):
+        merge_checkpoints([a], tmp_path / "m.jsonl",
+                          expect_fingerprint="fp2")
+
+
+def test_merge_all_shards_unusable_raises(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{broken\n{"_key": "b", "x": 2}\n')
+    with pytest.raises(ValueError, match="no usable shards"):
+        merge_checkpoints([bad, tmp_path / "gone.jsonl"])
+
+
+# ---------------------------------------------------------------------------
+# LMS mapping (de)serialization
+# ---------------------------------------------------------------------------
+
+@SET
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_mapping_roundtrip_through_json(seed):
+    """random mappings survive serialize -> json -> deserialize exactly."""
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    rng = np.random.default_rng(seed)
+    mapping = [(grp, random_lms(grp, g, arch.n_cores, arch.n_dram, rng))
+               for grp in groups]
+    wire = json.loads(json.dumps(mapping_to_jsonable(mapping)))
+    back = mapping_from_jsonable(wire)
+    assert back == mapping
+    for grp, lms in back:
+        lms.validate(grp, g, arch.n_cores, arch.n_dram)
+
+
+def test_mapping_from_jsonable_rejects_damaged_record():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    rng = np.random.default_rng(0)
+    mapping = [(groups[0], random_lms(groups[0], g, arch.n_cores,
+                                      arch.n_dram, rng))]
+    wire = mapping_to_jsonable(mapping)
+    name = next(iter(wire[0]["lms"]))
+    wire[0]["lms"][name]["cg"] = wire[0]["lms"][name]["cg"][:-1]  # break it
+    with pytest.raises(ValueError):
+        mapping_from_jsonable(wire)
+
+
+def test_keep_mappings_survive_resume_and_merge(tmp_path, monkeypatch):
+    g = _tf_small()
+    cands = _grid(2)
+    cfg = _cfg(iters=40, keep_mappings=True)
+    ck = tmp_path / "maps.jsonl"
+    first = run_dse(cands, {"TF": g}, cfg, checkpoint=ck)
+    assert all(set(p.mappings) == {"TF"} for p in first)
+
+    calls = []
+    real = dse_mod.evaluate_task
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse_mod, "evaluate_task", counting)
+    resumed = run_dse(cands, {"TF": g}, cfg, checkpoint=ck)
+    assert not calls                      # everything came from the file
+    assert _sig(resumed) == _sig(first)
+    by_arch = {p.arch: p for p in first}
+    for p in resumed:
+        assert p.mappings == by_arch[p.arch].mappings    # not metrics-only
+        for grp, lms in p.mappings["TF"]:
+            lms.validate(grp, g, p.arch.n_cores, p.arch.n_dram)
+    # a merged checkpoint carries the mappings too
+    merged = tmp_path / "maps.merged.jsonl"
+    merge_checkpoints([ck], merged)
+    remerged = run_dse(cands, {"TF": g}, cfg, checkpoint=merged)
+    assert not calls
+    assert remerged[0].mappings == first[0].mappings
+
+
+def test_metrics_only_checkpoint_upgrades_to_mappings(tmp_path, monkeypatch):
+    """Resuming a metrics-only sweep with keep_mappings=True recomputes the
+    tasks (same fingerprint) and upgrades their records in place."""
+    g = _tf_small()
+    cands = _grid(2)
+    ck = tmp_path / "up.jsonl"
+    run_dse(cands, {"TF": g}, _cfg(iters=40), checkpoint=ck)
+    assert "mapping" not in ck.read_text()
+
+    calls = []
+    real = dse_mod.evaluate_task
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse_mod, "evaluate_task", counting)
+    pts = run_dse(cands, {"TF": g}, _cfg(iters=40, keep_mappings=True),
+                  checkpoint=ck)
+    assert len(calls) == 2                # metrics-only records recomputed
+    assert all(p.mappings for p in pts)
+    calls.clear()
+    run_dse(cands, {"TF": g}, _cfg(iters=40, keep_mappings=True),
+            checkpoint=ck)
+    assert not calls                      # records now carry mappings
+
+
+# ---------------------------------------------------------------------------
+# Schema v1 -> v2 migration
+# ---------------------------------------------------------------------------
+
+def _v1_fingerprint(workloads, cfg, use_sa=True):
+    with ExplorationEngine(workloads, cfg) as eng:
+        return eng._fingerprint(use_sa, schema=1)
+
+
+def _write_v1_checkpoint(path, fingerprint, rows):
+    """rows: (arch, seed, point-ish dict with per_workload)."""
+    lines = [json.dumps({"_config": fingerprint})]
+    for arch, seed, per_workload in rows:
+        lines.append(json.dumps({
+            "_key": candidate_key(arch), "seed": seed,
+            "arch": arch_to_dict(arch), "mc": 1.0, "energy_j": 1.0,
+            "delay_s": 1.0, "objective": 1.0,
+            "per_workload": per_workload}))
+    path.write_text("".join(l + "\n" for l in lines))
+
+
+def test_v1_checkpoint_migrates_and_resumes_single_workload(tmp_path,
+                                                            monkeypatch):
+    """A PR-2 (schema v1) checkpoint of a single-workload sweep resumes in
+    full: records are split into task records and the v1 candidate seed
+    matches the v2 seed of workload 0."""
+    g = _tf_small()
+    cands = _grid(3)
+    cfg = _cfg(iters=40)
+    fresh = run_dse(cands, {"TF": g}, cfg)
+    by_arch = {p.arch: p for p in fresh}
+    ck = tmp_path / "v1.jsonl"
+    _write_v1_checkpoint(
+        ck, _v1_fingerprint({"TF": g}, cfg),
+        [(arch, derive_seed(cfg.sa.seed, ci),
+          {"TF": list(by_arch[arch].per_workload["TF"])})
+         for ci, arch in enumerate(cands)])
+
+    calls = []
+    real = dse_mod.evaluate_task
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse_mod, "evaluate_task", counting)
+    resumed = run_dse(cands, {"TF": g}, cfg, checkpoint=ck)
+    assert not calls                     # fully reused after migration
+    assert _sig(resumed) == _sig(fresh)
+    text = ck.read_text()                # rewritten under the v2 schema
+    assert '"dse:v2:' in text and "per_workload" not in text
+    assert "|wl=TF" in text
+
+
+def test_v1_checkpoint_multi_workload_recomputes_independent_seeds(
+        tmp_path, monkeypatch):
+    """v1 ran every workload under one candidate seed; v2 gives workload
+    index >= 1 its own seed, so those migrated records must recompute
+    (seed gate) while workload 0's records are reused."""
+    workloads = {"A": _tf_small("tf-a"), "B": _tf_small("tf-b", seq=96)}
+    cands = _grid(2)
+    cfg = _cfg(iters=40)
+    fresh = run_dse(cands, workloads, cfg)
+    by_arch = {p.arch: p for p in fresh}
+    ck = tmp_path / "v1mw.jsonl"
+    # "A" carries the true v2 values (reused); "B" carries garbage that the
+    # seed gate must refuse (v1 would have computed B under the shared seed)
+    _write_v1_checkpoint(
+        ck, _v1_fingerprint(workloads, cfg),
+        [(arch, derive_seed(cfg.sa.seed, ci),
+          {"A": list(by_arch[arch].per_workload["A"]), "B": [1e9, 1e9]})
+         for ci, arch in enumerate(cands)])
+
+    calls = []
+    real = dse_mod.evaluate_task
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse_mod, "evaluate_task", counting)
+    resumed = run_dse(cands, workloads, cfg, checkpoint=ck)
+    assert len(calls) == 2               # one "B" task per candidate
+    assert _sig(resumed) == _sig(fresh)  # garbage never surfaced
+
+
+def test_migrate_v1_record_shape():
+    out = migrate_v1_record("K", {"seed": 7, "arch": {"a": 1},
+                                  "per_workload": {"B": [2.0, 3.0],
+                                                   "A": [4.0, 5.0]}})
+    assert [k for k, _ in out] == ["K|wl=A", "K|wl=B"]   # sorted names
+    rec = dict(out)["K|wl=B"]
+    assert rec["seed"] == 7 and rec["energy_j"] == 2.0 \
+        and rec["delay_s"] == 3.0
+    assert migrate_v1_record("K", {"seed": 1}) == []     # malformed: drop
+
+
+# ---------------------------------------------------------------------------
+# n_chains=2 degeneracy fix
+# ---------------------------------------------------------------------------
+
+def test_sa_optimize_two_chains_warns_and_runs_minimum_ladder():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    with pytest.warns(RuntimeWarning, match="n_chains=2"):
+        r2 = sa_optimize(g, arch, groups, 8,
+                         SAConfig(iters=120, seed=0, n_chains=2))
+    r3 = sa_optimize(g, arch, groups, 8,
+                     SAConfig(iters=120, seed=0, n_chains=3))
+    assert (r2.cost, r2.energy_j, r2.delay_s) == \
+        (r3.cost, r3.energy_j, r3.delay_s)
+    assert r2.proposed == r3.proposed
