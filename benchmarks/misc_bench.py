@@ -270,6 +270,50 @@ def dse_smoke() -> Dict:
     return out
 
 
+def re_tuning(iters: int = 600, n_chains: int = 4,
+              n_candidates: int = 3) -> Dict:
+    """Replica-exchange knob sweep (ROADMAP): ``t_ladder`` x ``swap_every``
+    on the --quick Table-I grid, reporting per-pair swap-acceptance rates
+    and the best cost found.
+
+    Healthy parallel tempering wants ~20-40% acceptance per adjacent pair:
+    near 0% the ladder decouples into independent restarts, near 100% the
+    rungs are so close that tempering adds nothing over one chain.  The
+    ``core/sa.py`` defaults are set from this sweep (see SAConfig).
+    """
+    from repro.core.evaluator import evaluator_for
+    from repro.core.explore import replica_exchange_sa
+
+    cands = _dse_grid(n_candidates)
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+    rows = []
+    for t_ladder in (1.5, 2.0, 3.0, 5.0):
+        for swap_every in (10, 25, 50, 100):
+            rates, costs = [], []
+            for arch in cands:
+                groups = partition_graph(g, arch, 8)
+                cfg = SAConfig(iters=iters, seed=0, n_chains=n_chains,
+                               t_ladder=t_ladder, swap_every=swap_every)
+                res = replica_exchange_sa(g, arch, groups, 8, cfg,
+                                          evaluator=evaluator_for(arch, g))
+                rates.extend(res.swap_rates())
+                costs.append(res.cost)
+            mean_rate = float(np.mean(rates)) if rates else 0.0
+            geo_cost = float(np.exp(np.mean(np.log(costs))))
+            in_band = 0.20 <= mean_rate <= 0.40
+            rows.append({"t_ladder": t_ladder, "swap_every": swap_every,
+                         "swap_rate": mean_rate, "geo_cost": geo_cost,
+                         "in_band": in_band})
+            print(f"[retune] t_ladder={t_ladder:<4g} swap_every="
+                  f"{swap_every:<4d} swap-accept={mean_rate:5.1%} "
+                  f"geo-cost={geo_cost:.4e}{'  <- 20-40% band' if in_band else ''}")
+    best = min(rows, key=lambda r: r["geo_cost"])
+    print(f"[retune] best cost at t_ladder={best['t_ladder']} "
+          f"swap_every={best['swap_every']} "
+          f"(swap-accept {best['swap_rate']:.1%})")
+    return {"rows": rows, "best": best}
+
+
 def kernel_bench() -> Dict:
     from repro.kernels import ops, ref
     out = {}
@@ -319,6 +363,9 @@ if __name__ == "__main__":
     ap.add_argument("--fanout", action="store_true",
                     help="uncached (candidate x workload) fan-out "
                     "throughput run (16 candidates x 4 workloads)")
+    ap.add_argument("--retune", action="store_true",
+                    help="replica-exchange t_ladder/swap_every sweep on "
+                    "the quick Table-I grid (sets core/sa.py defaults)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     if args.smoke:
@@ -326,5 +373,7 @@ if __name__ == "__main__":
     elif args.fanout:
         dse_throughput(n_candidates=16, n_workers=4, iters=600,
                        n_workloads=4)
+    elif args.retune:
+        re_tuning()
     else:
         main(force=args.force)

@@ -29,7 +29,7 @@ import argparse
 import json
 import os
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 from repro.core.dse import DSEConfig, grid_candidates
 from repro.core.explore import (ExplorationEngine, merge_checkpoints,
@@ -76,14 +76,19 @@ def default_checkpoint(quick: bool, shard: Tuple[int, int]) -> Path:
 
 def _run(quick: bool = False, shard: Tuple[int, int] = (0, 1),
          checkpoint: Optional[Path] = None, force: bool = False,
-         n_workers: Optional[int] = None) -> Dict:
+         n_workers: Optional[int] = None,
+         screen: Union[None, float, str] = None) -> Dict:
     cands, workloads, cfg, keep = _setup(quick)
     ckpt = Path(checkpoint) if checkpoint else default_checkpoint(quick, shard)
     if force and ckpt.exists():
         # the sweep fingerprint versions cfg+workloads, not the cost model:
         # a forced re-measure must not replay checkpointed numbers
         ckpt.unlink()
-    if keep is None:
+    if screen is not None:
+        # explicit --screen: a fraction, or 'auto' for the adaptive gap
+        # rule (unsharded runs only — see ExplorationEngine.run)
+        keep = screen
+    elif keep is None:
         keep = N_REFINE / len(cands)
     if n_workers is None:
         n_workers = max(1, min(4, os.cpu_count() or 1))
@@ -170,8 +175,15 @@ def cli() -> None:
     ap.add_argument("--expect", default=None,
                     help="assert best/refined/Pareto match this result JSON")
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--screen", default=None,
+                    help="screening mode: a keep fraction (0..1] or 'auto' "
+                    "for the adaptive gap rule (unsharded runs only); "
+                    "default derives from --quick / N_REFINE")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+    screen: Union[None, float, str] = None
+    if args.screen is not None:
+        screen = "auto" if args.screen == "auto" else float(args.screen)
 
     if args.merge:
         if not args.checkpoint:
@@ -180,10 +192,11 @@ def cli() -> None:
         return
 
     shard = parse_shard_spec(args.shard)
-    if args.quick or shard != (0, 1) or args.out or args.checkpoint:
+    if args.quick or shard != (0, 1) or args.out or args.checkpoint \
+            or screen is not None:
         data = _run(quick=args.quick, shard=shard,
                     checkpoint=args.checkpoint, force=args.force,
-                    n_workers=args.workers)
+                    n_workers=args.workers, screen=screen)
         if data["best"] is not None:
             print(f"[table1] shard best: {data['best_arch']} "
                   f"obj={data['best']['objective']:.3e} "

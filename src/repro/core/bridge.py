@@ -61,6 +61,15 @@ class StagePlan:
     devices: Tuple[int, ...]          # flat device indices into the mesh
     # per-layer Part factors: dict layer -> (ph, pw, pb, pk)
     parts: Dict[str, Tuple[int, int, int, int]] = field(default_factory=dict)
+    # per-layer CG in correspondence order (the Rule's row-major (h,w,b,k)
+    # nesting) — the realization subsystem reshapes the dominant layer's CG
+    # into the stage's device mesh, so the order must survive the collapse
+    cgs: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+
+    def dominant_layer(self) -> str:
+        """Layer with the largest core group: its ``Part`` is the stage's
+        sharding skeleton (mesh shape + PartitionSpec axes)."""
+        return max(self.layers, key=lambda n: (len(self.cgs.get(n, ())), n))
 
 
 @dataclass
@@ -76,6 +85,12 @@ class MeshPlan:
                 return i
         raise KeyError(layer)
 
+    @property
+    def n_devices_needed(self) -> int:
+        """1 + highest flat device index any stage references."""
+        return 1 + max((max(st.devices) for st in self.stages
+                        if st.devices), default=-1)
+
 
 def lms_to_plan(mapping: Mapping, delay_s: float = 0.0,
                 energy_j: float = 0.0) -> MeshPlan:
@@ -90,13 +105,15 @@ def lms_to_plan(mapping: Mapping, delay_s: float = 0.0,
     for group, lms in mapping:
         devs: List[int] = []
         parts: Dict[str, Tuple[int, int, int, int]] = {}
+        cgs: Dict[str, Tuple[int, ...]] = {}
         for name in group.names:
             ms = lms.ms[name]
             devs.extend(ms.cg)
             parts[name] = ms.part
+            cgs[name] = ms.cg
         stages.append(StagePlan(layers=tuple(group.names),
                                 devices=tuple(sorted(set(devs))),
-                                parts=parts))
+                                parts=parts, cgs=cgs))
         bu = group.batch_unit
     return MeshPlan(stages=stages, batch_unit=bu, cost_delay_s=delay_s,
                     cost_energy_j=energy_j)

@@ -182,7 +182,7 @@ def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
 
 def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
             cfg: DSEConfig, use_sa: bool = True, progress: bool = False,
-            n_workers: int = 1, screen_keep: float = 1.0,
+            n_workers: int = 1, screen_keep: Union[float, str] = 1.0,
             checkpoint: Union[str, Path, None] = None,
             shard: Tuple[int, int] = (0, 1),
             mp_context: str = "spawn") -> List[DSEPoint]:
@@ -192,7 +192,10 @@ def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
       processes; results are bit-identical to the serial path (per-task
       seeds derive from the candidate/workload indices, not scheduling).
     * ``screen_keep < 1.0`` first scores every candidate with the cheap
-      T-Map pass and runs full SA only on the best fraction.
+      T-Map pass and runs full SA only on the best fraction;
+      ``screen_keep="auto"`` prunes adaptively instead — refinement stops
+      once the T-Map gap to the best exceeds the largest SA improvement
+      observed so far (unsharded sweeps only).
     * ``checkpoint`` names a JSON-lines file: completed tasks are skipped
       on re-run (resume after a crash / interrupted sweep).
     * ``shard=(i, n)`` evaluates only candidates with ``index % n == i``;

@@ -161,6 +161,29 @@ class Evaluator:
         return ge, an
 
     # ------------------------------------------------------------------
+    def traffic_summary(self, group: LayerGroup, lms: LMS,
+                        total_batch: int) -> Dict[str, float]:
+        """Per-pass traffic totals of one group, split by physical axis.
+
+        The realization subsystem diffs these against the measured traffic
+        of the compiled stage program (``repro.realize.measure``); the keys
+        mirror the measured axes: MACs doubled to FLOPs, NoC vs D2D link
+        bytes (amortized weight loads included), DRAM bytes per pass.
+        """
+        ge, an = self.eval_group(group, lms, total_batch)
+        edge_tot = an.edge_bytes + an.edge_bytes_amortized
+        return {
+            "flops": 2.0 * float(an.core_macs.sum()),
+            "noc_bytes": float(edge_tot[self._not_d2d].sum()),
+            "d2d_bytes": float(edge_tot[self._is_d2d].sum()),
+            "dram_bytes": float((an.dram_bytes
+                                 + an.dram_bytes_amortized).sum()),
+            "delay_s": ge.delay_s,
+            "energy_j": ge.energy_j,
+            "glb_overflow_bytes": ge.glb_overflow_bytes,
+        }
+
+    # ------------------------------------------------------------------
     def evaluate(self, mapping: Sequence[Tuple[LayerGroup, LMS]],
                  total_batch: int) -> EvalResult:
         groups: List[GroupEval] = []

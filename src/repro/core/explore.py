@@ -154,16 +154,21 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
         np.random.SeedSequence([abs(int(cfg.seed)), 0x52455853]))  # "REXS"
     swap_every = max(1, cfg.swap_every)
     history: List[float] = []
+    n_pairs = max(0, len(ladder) - 1)
+    swap_attempts = [0] * n_pairs
+    swap_accepts = [0] * n_pairs
     for it in range(cfg.iters):
         for chain in chains:
             chain.step()
         if (it + 1) % swap_every == 0:
-            for k in range(len(ladder) - 1):
+            for k in range(n_pairs):
                 cold, hot = ladder[k], ladder[k + 1]
                 t_cold = max(cold.T, 1e-30)
                 t_hot = max(hot.T, 1e-30)
                 delta = (1.0 / t_cold - 1.0 / t_hot) * (cold.cost - hot.cost)
+                swap_attempts[k] += 1
                 if delta >= 0 or swap_rng.random() < math.exp(max(delta, -700.0)):
+                    swap_accepts[k] += 1
                     cold.exchange_state(hot)
         if cfg.log_every and it % cfg.log_every == 0:
             history.append(chains[0].cost)      # reference-chain trace
@@ -175,6 +180,8 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
     res.history = history
     res.accepted = sum(c.accepted for c in chains)
     res.proposed = sum(c.proposed for c in chains)
+    res.swap_attempts = swap_attempts
+    res.swap_accepts = swap_accepts
     return res
 
 
@@ -732,7 +739,8 @@ class ExplorationEngine:
         return self._pool
 
     # -- fingerprint for checkpoint compatibility ----------------------
-    def _fingerprint(self, use_sa: bool, schema: int = 2) -> str:
+    def _fingerprint(self, use_sa: bool, schema: int = 2,
+                     re_knobs: Optional[Tuple[int, float]] = None) -> str:
         c = self.cfg
         # workloads hash by *content*, not name: editing a graph while
         # keeping its dict key must invalidate the checkpoint.
@@ -741,12 +749,30 @@ class ExplorationEngine:
         # just the tasks whose records lack a mapping.
         wl = ",".join(f"{n}:{graph_fingerprint(self.workloads[n])}"
                       for n in self._wl_names)
+        swap, ladder = re_knobs or (c.sa.swap_every, c.sa.t_ladder)
         return (f"dse:v{schema}:a{c.alpha:g}:b{c.beta:g}:g{c.gamma:g}:"
                 f"B{c.batch}:"
                 f"sa({c.sa.iters},{c.sa.t0:g},{c.sa.t_end:g},{c.sa.seed},"
                 f"{c.sa.beta:g},{c.sa.gamma:g},{c.sa.n_chains},"
-                f"{c.sa.swap_every},{c.sa.t_ladder:g}):sa={int(use_sa)}:"
+                f"{swap},{ladder:g}):sa={int(use_sa)}:"
                 f"wl={wl}")
+
+    def _open_sweep(self, checkpoint: Union[str, Path],
+                    use_sa: bool) -> ResumableSweep:
+        """Open a checkpoint under the current fingerprint, accepting
+        superseded-but-equivalent ones via the legacy migration map."""
+        keep_rec = lambda k, r: [(k, r)]           # identity migration
+        legacy = {self._fingerprint(use_sa, schema=1): migrate_v1_record}
+        if self.cfg.sa.n_chains == 1:
+            # single-chain sweeps never consult the replica-exchange
+            # knobs, yet the fingerprint embeds them — checkpoints
+            # written under the pre-retune defaults (50, 3.0) are
+            # value-identical and must survive the default change
+            legacy[self._fingerprint(use_sa, re_knobs=(50, 3.0))] = keep_rec
+            legacy[self._fingerprint(use_sa, schema=1,
+                                     re_knobs=(50, 3.0))] = migrate_v1_record
+        return ResumableSweep(checkpoint, self._fingerprint(use_sa),
+                              legacy=legacy)
 
     # -- task construction / reduction ---------------------------------
     def _tasks(self, indexed: Sequence[Tuple[int, ArchConfig]]
@@ -768,20 +794,23 @@ class ExplorationEngine:
 
     # -- evaluation fan-out --------------------------------------------
     def _map_tasks(self, tasks: List[_Task], use_sa: bool,
-                   checkpoint: Union[str, Path, None], stage: str,
+                   checkpoint: Union[str, Path, "ResumableSweep", None],
+                   stage: str,
                    ) -> Dict[Tuple[int, int], "_dse.TaskResult"]:
         """Evaluate tasks (any order); the returned dict is keyed
         ``(cand_idx, wl_idx)``, so callers reduce deterministically
-        regardless of completion order."""
+        regardless of completion order.  ``checkpoint`` may be an
+        already-open :class:`ResumableSweep` (the adaptive path calls
+        this once per kept candidate and must not re-parse the file
+        each time)."""
         results: Dict[Tuple[int, int], "_dse.TaskResult"] = {}
         keep = self.cfg.keep_mappings
         sweep: Optional[ResumableSweep] = None
-        if checkpoint is not None:
-            fp = self._fingerprint(use_sa)
-            sweep = ResumableSweep(
-                checkpoint, fp,
-                legacy={self._fingerprint(use_sa, schema=1):
-                        migrate_v1_record})
+        if isinstance(checkpoint, ResumableSweep):
+            sweep = checkpoint
+        elif checkpoint is not None:
+            sweep = self._open_sweep(checkpoint, use_sa)
+        if sweep is not None:
             n_nomap = 0
             for ci, wi, arch, wl, seed in tasks:
                 rec = sweep.get(task_checkpoint_key(arch, wl))
@@ -876,7 +905,8 @@ class ExplorationEngine:
                       key=lambda p: p.objective)
 
     def run(self, candidates: Sequence[ArchConfig], use_sa: bool = True,
-            screen_keep: float = 1.0, shard: Tuple[int, int] = (0, 1),
+            screen_keep: Union[float, str] = 1.0,
+            shard: Tuple[int, int] = (0, 1),
             ) -> List["_dse.DSEPoint"]:
         """Full sweep: optional screening stage, then (parallel) evaluation
         of this shard's (candidate x workload) tasks.
@@ -886,11 +916,22 @@ class ExplorationEngine:
         ``n_workers``, completion order, screening of *other* candidates,
         sharding and resume.
 
+        ``screen_keep`` selects the screening mode: a fraction in (0, 1)
+        keeps the best fixed fraction of T-Map scores (the explicit
+        override); ``"auto"`` applies the **adaptive gap rule** — refine
+        candidates in screened order and stop as soon as the next
+        candidate's T-Map objective gap vs the best screened score exceeds
+        the largest SA improvement observed so far in this sweep (a
+        heuristic: see :meth:`_run_adaptive`); ``1.0`` (default) is
+        exhaustive.
+
         ``shard=(i, n)`` evaluates only the candidates with
         ``index % n == i``.  The screening stage (deterministic, no SA)
         runs over the FULL grid in every shard so all shards agree on the
         global keep set — merging the n shard checkpoints and resuming is
-        then bit-identical to the unsharded sweep.
+        then bit-identical to the unsharded sweep.  Adaptive mode is
+        incompatible with sharding: the gap rule consumes SA results as
+        they arrive, which independent shards cannot agree on.
         """
         candidates = list(candidates)
         si, sn = shard
@@ -898,6 +939,20 @@ class ExplorationEngine:
             raise ValueError(f"bad shard {si}/{sn}: need 0 <= i < n")
         indexed = list(enumerate(candidates))
         self.last_screen = None
+        if use_sa and screen_keep == "auto" and len(candidates) > 1:
+            if sn > 1:
+                raise ValueError(
+                    "adaptive screening (screen_keep='auto') decides the "
+                    "keep set from SA results as they arrive, which "
+                    "independent shards cannot agree on; pass a fixed "
+                    "screen_keep fraction for sharded sweeps")
+            return self._run_adaptive(indexed)
+        if screen_keep == "auto":
+            screen_keep = 1.0          # nothing to screen (or no SA stage)
+        if isinstance(screen_keep, str):
+            raise ValueError(
+                f"screen_keep must be a fraction or 'auto', "
+                f"got {screen_keep!r}")
         if use_sa and screen_keep < 1.0 and len(candidates) > 1:
             screen_results = self._map_tasks(
                 self._tasks(indexed), use_sa=False, checkpoint=None,
@@ -923,4 +978,56 @@ class ExplorationEngine:
         results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
                                   checkpoint=self.checkpoint, stage="dse")
         return sorted(self._reduce(indexed, results),
+                      key=lambda p: p.objective)
+
+    def _run_adaptive(self, indexed: List[Tuple[int, ArchConfig]]
+                      ) -> List["_dse.DSEPoint"]:
+        """Gap-rule screening (``screen_keep="auto"``), ROADMAP item.
+
+        After the T-Map screen, candidates are refined best-screened-first.
+        Let ``gain_max`` be the largest log-objective improvement SA has
+        delivered over its own candidate's T-Map score so far; a candidate
+        whose T-Map gap to the *best* screened score exceeds ``gain_max``
+        is pruned, and so is everything behind it (screened order is
+        monotone in the gap).  This is a *heuristic* stopping rule, not a
+        bound: it assumes no pruned candidate's achievable SA gain exceeds
+        the largest gain observed on the refined ones — a candidate whose
+        T-Map mapping is unusually far from its optimum can still be
+        missed (the fixed-fraction override exists for exactly that
+        doubt).  Huge grids prune hard; tight grids degrade to
+        exhaustive.  Fully deterministic (screened order + per-task
+        seeds), so resume replays identically.
+        """
+        screen_results = self._map_tasks(self._tasks(indexed), use_sa=False,
+                                         checkpoint=None, stage="screen")
+        screen_pts = self._reduce(indexed, screen_results)
+        order = sorted(range(len(indexed)),
+                       key=lambda i: screen_pts[i].objective)
+        self.last_screen = [screen_pts[i] for i in order]
+        # one sweep for the whole refine loop: re-opening per candidate
+        # would re-parse the growing checkpoint O(kept^2) times
+        sweep: Union[ResumableSweep, None] = None
+        if self.checkpoint is not None:
+            sweep = self._open_sweep(self.checkpoint, use_sa=True)
+        best_log = math.log(screen_pts[order[0]].objective)
+        gain_max = 0.0
+        kept: List[Tuple[int, ArchConfig]] = []
+        results: Dict[Tuple[int, int], "_dse.TaskResult"] = {}
+        for rank, oi in enumerate(order):
+            gap = math.log(screen_pts[oi].objective) - best_log
+            if rank > 0 and gap > gain_max:
+                break
+            ci, arch = indexed[oi]
+            res = self._map_tasks(self._tasks([(ci, arch)]), use_sa=True,
+                                  checkpoint=sweep, stage="dse")
+            results.update(res)
+            kept.append((ci, arch))
+            pt = self._reduce([(ci, arch)], res)[0]
+            gain_max = max(gain_max, math.log(screen_pts[oi].objective)
+                           - math.log(pt.objective))
+        print(f"[explore] adaptive screening kept {len(kept)}/{len(indexed)}"
+              f" candidates (largest SA gain {gain_max:.3g} in "
+              f"log-objective; pruned {len(indexed) - len(kept)})",
+              flush=True)
+        return sorted(self._reduce(sorted(kept), results),
                       key=lambda p: p.objective)

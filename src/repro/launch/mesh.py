@@ -3,32 +3,50 @@ jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+# the fix for "not enough devices" on a CPU host: force virtual devices
+# BEFORE the first jax import (jax locks the device count on first init)
+DRYRUN_ENV_FIX = ("set XLA_FLAGS=--xla_force_host_platform_device_count=<N> "
+                  "before the first jax import (launch/dryrun.py and "
+                  "launch/realize.py do this at module top)")
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
+
+def _device_pool(devices: Optional[Sequence], n: int, what: str):
+    import jax
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for {what}, have {len(devs)}"
+            + ("" if devices is not None else f"; on a CPU host, "
+               f"{DRYRUN_ENV_FIX}"))
+    return devs
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None):
+    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512).
+
+    ``devices`` overrides the global ``jax.devices()`` pool so callers
+    (e.g. the realization driver) can carve sub-meshes out of an already
+    partitioned device set without monkey-patching jax.
+    """
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
-    devs = jax.devices()
-    if len(devs) < n:
-        raise RuntimeError(
-            f"need {n} devices for mesh {shape}, have {len(devs)} "
-            f"(dry-run sets --xla_force_host_platform_device_count=512)")
+    devs = _device_pool(devices, n, f"mesh {shape}")
     return jax.sharding.Mesh(
         np.asarray(devs[:n]).reshape(shape), axes)
 
 
 def make_host_mesh(shape: Tuple[int, ...] = (1, 1),
-                   axes: Tuple[str, ...] = ("data", "model")):
+                   axes: Tuple[str, ...] = ("data", "model"),
+                   devices: Optional[Sequence] = None):
     """Small mesh over whatever devices exist (tests / examples / CPU)."""
     import jax
     n = int(np.prod(shape))
-    devs = jax.devices()
-    if len(devs) < n:
-        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    devs = _device_pool(devices, n, f"mesh {shape}")
     return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,21 @@
+"""Mapping realization subsystem: DSE checkpoint -> executable sharded JAX
+program -> measured-cost calibration loop.
+
+The four modules close the loop the ROADMAP called the "Pallas/TPU bridge":
+
+* :mod:`.plan`      — load serialized ``keep_mappings`` checkpoint records
+  and lower each through ``core/bridge.lms_to_plan`` into a validated
+  :class:`~repro.core.bridge.MeshPlan`;
+* :mod:`.program`   — compile a plan into a sharded JAX program on the
+  host-platform dry-run mesh, routing matmul/attention/SSD layers through
+  the Pallas kernels (interpret mode on CPU);
+* :mod:`.measure`   — extract per-stage FLOPs / ICI / DCI / HBM traffic
+  from the compiled HLO and diff them against the analytical evaluator's
+  predictions for the same LMS;
+* :mod:`.calibrate` — fit per-:class:`~repro.core.hw.Tech` correction
+  factors from those diffs and emit a ``Tech`` overlay that ``run_dse``
+  can consume for a measured-calibrated second search pass.
+
+``launch/realize.py`` is the CLI driver; ``examples/realize_demo.py`` runs
+the whole loop on CPU.
+"""

@@ -1,0 +1,247 @@
+"""Checkpoint -> validated :class:`MeshPlan` lowering (realization stage 1).
+
+A PR-3 schema-v2 checkpoint written with ``DSEConfig(keep_mappings=True)``
+carries one record per (candidate, workload) task whose ``mapping`` field is
+the full serialized LP-SPM mapping.  This module
+
+* parses those records back into :class:`RealizeCandidate` objects
+  (``arch_from_dict`` + ``mapping_from_jsonable``, with the LMS structural
+  invariants re-validated against the workload graph),
+* verifies the supplied workload graph *content-matches* the checkpoint's
+  config fingerprint (the sweep hashed its graphs; realizing a mapping
+  against a different graph would silently measure the wrong program),
+* lowers each mapping through :func:`repro.core.bridge.lms_to_plan` and
+  validates the resulting plan against a device budget (core ids are flat
+  mesh device indices — a plan needing more devices than the mesh has is
+  refused with the dry-run env fix named in the error).
+
+No jax import here: planning is pure bookkeeping and stays usable from
+processes that must not initialize a backend.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.bridge import MeshPlan, lms_to_plan
+from ..core.explore import (ResumableSweep, arch_from_dict, graph_fingerprint,
+                            mapping_from_jsonable)
+from ..core.hw import ArchConfig
+from ..core.sa import Mapping
+from ..core.workload import Graph
+
+
+@dataclass
+class RealizeCandidate:
+    """One checkpointed (candidate, workload) task selected for realization."""
+    key: str                      # schema-v2 checkpoint key (resume identity)
+    workload: str                 # workload dict key in the sweep
+    arch: ArchConfig
+    mapping: Mapping
+    graph: Graph
+    energy_j: float               # analytical prediction from the sweep
+    delay_s: float
+    seed: Optional[int] = None
+
+    @property
+    def edp(self) -> float:
+        return self.energy_j * self.delay_s
+
+    def lower(self) -> MeshPlan:
+        """Lower the LMS mapping into a MeshPlan (bridge collapse)."""
+        return lms_to_plan(self.mapping, delay_s=self.delay_s,
+                           energy_j=self.energy_j)
+
+
+# ---------------------------------------------------------------------------
+# Workload resolution (checkpoints store graph fingerprints, not graphs)
+# ---------------------------------------------------------------------------
+
+def _tf(**kw) -> Graph:
+    from ..core.workloads import transformer
+    return transformer(**kw)
+
+
+WORKLOAD_PRESETS: Dict[str, Callable[[], Graph]] = {
+    # the table1 --quick grid's workload (and the CI realize smoke's)
+    "tf-quick": lambda: _tf(n_layers=2, d_model=128, d_ff=256, seq=64,
+                            name="tf-s"),
+    # the full Table-I workload
+    "tf-paper": lambda: _tf(),
+}
+
+
+def graph_from_spec(spec: str) -> Graph:
+    """Build a workload graph from a CLI spec.
+
+    ``tf-quick`` / ``tf-paper``       — presets above
+    ``transformer:k=v,k=v,...``       — core/workloads transformer kwargs
+    ``lm:<config>[:seq=S[,n_layers=L]]`` — an LM architecture's layer DAG
+    """
+    if spec in WORKLOAD_PRESETS:
+        return WORKLOAD_PRESETS[spec]()
+    kind, _, rest = spec.partition(":")
+    if kind == "transformer":
+        kw: Dict[str, Union[int, str]] = {}
+        for item in filter(None, rest.split(",")):
+            k, _, v = item.partition("=")
+            kw[k] = v if k == "name" else int(v)
+        return _tf(**kw)
+    if kind == "lm":
+        from ..configs import get_config
+        from ..core.workloads.lm_graph import lm_graph
+        name, _, params = rest.partition(":")
+        kw = {}
+        for item in filter(None, params.split(",")):
+            k, _, v = item.partition("=")
+            kw[k] = int(v)
+        return lm_graph(get_config(name), **kw)
+    raise ValueError(
+        f"unknown workload spec {spec!r}; use a preset "
+        f"({', '.join(sorted(WORKLOAD_PRESETS))}), 'transformer:k=v,...' "
+        f"or 'lm:<config>[:seq=S,n_layers=L]'")
+
+
+_WL_FP = re.compile(r"(?:^|,)([^,:]+):([0-9a-f]{12})")
+
+
+def checkpoint_workload_fingerprints(path: Union[str, Path]
+                                     ) -> Dict[str, str]:
+    """``{workload name: graph fingerprint}`` from a checkpoint's header.
+
+    Empty when the file has no parseable ``_config`` header (e.g. a
+    hand-built record file) — callers then skip the content check.
+    """
+    p = Path(path)
+    if not p.exists():
+        return {}
+    with p.open() as f:              # header is the first line; don't
+        for line in f:               # slurp a whole mapping checkpoint
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                return {}
+            if "_config" not in rec:
+                return {}
+            cfg = rec["_config"]
+            _, _, wl = cfg.partition(":wl=")
+            return dict(_WL_FP.findall(wl))
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Loading + validation
+# ---------------------------------------------------------------------------
+
+def load_realize_candidates(ckpt: Union[str, Path],
+                            workloads: Dict[str, Graph],
+                            top: int = 0,
+                            verbose: bool = True,
+                            sweep: Optional[ResumableSweep] = None
+                            ) -> List[RealizeCandidate]:
+    """Parse a schema-v2 checkpoint into realization candidates.
+
+    Only records carrying a serialized mapping qualify (metrics-only records
+    are counted and reported — they come from ``keep_mappings=False``
+    sweeps and cannot be realized).  Each mapping is re-validated against
+    the supplied graph (``LMS.validate``: Part/CG/FD structural rules), and
+    the graph itself is checked against the checkpoint header's content
+    fingerprint.  Results are sorted best analytical EDP first; ``top > 0``
+    truncates.  Pass an already-parsed ``sweep`` (``ResumableSweep.read``)
+    to avoid re-reading a large mapping checkpoint.
+    """
+    if sweep is None:
+        sweep = ResumableSweep.read(ckpt)
+    fps = checkpoint_workload_fingerprints(ckpt)
+    for wl, g in workloads.items():
+        if wl in fps and graph_fingerprint(g) != fps[wl]:
+            raise ValueError(
+                f"workload {wl!r}: supplied graph (fingerprint "
+                f"{graph_fingerprint(g)}) does not content-match the "
+                f"checkpoint's ({fps[wl]}); realizing a mapping against a "
+                f"different graph would measure the wrong program")
+    usable: List[Tuple[float, str, Dict]] = []
+    n_nomap = n_badwl = 0
+    for key, rec in sweep.as_dict().items():
+        if "mapping" not in rec:
+            n_nomap += 1
+            continue
+        if rec.get("workload") not in workloads:
+            n_badwl += 1
+            continue
+        usable.append((float(rec["energy_j"]) * float(rec["delay_s"]),
+                       key, rec))
+    if verbose and (n_nomap or n_badwl):
+        print(f"[realize] skipped {n_nomap} metrics-only records "
+              f"(keep_mappings was off) and {n_badwl} records with no "
+              f"supplied workload graph")
+    if not usable:
+        raise ValueError(
+            f"{ckpt}: no realizable records (need a keep_mappings=True "
+            f"sweep checkpoint and matching --workload graphs)")
+    # rank on the raw record metrics and truncate BEFORE deserializing:
+    # mappings are the bulky part of a keep_mappings checkpoint, and
+    # --top K only ever needs K of them parsed + validated
+    usable.sort(key=lambda t: (t[0], t[1]))
+    if top > 0:
+        usable = usable[:top]
+    out: List[RealizeCandidate] = []
+    for _edp, key, rec in usable:
+        wl = rec["workload"]
+        g = workloads[wl]
+        arch = arch_from_dict(rec["arch"])
+        mapping = mapping_from_jsonable(rec["mapping"])
+        for grp, lms in mapping:
+            lms.validate(grp, g, arch.n_cores, arch.n_dram)
+        out.append(RealizeCandidate(
+            key=key, workload=wl, arch=arch, mapping=mapping, graph=g,
+            energy_j=float(rec["energy_j"]), delay_s=float(rec["delay_s"]),
+            seed=rec.get("seed")))
+    return out
+
+
+def validate_plan(plan: MeshPlan, n_devices: int,
+                  arch: Optional[ArchConfig] = None) -> None:
+    """Refuse plans the target mesh cannot host.
+
+    Core ids in a Gemini mapping are flat device indices on the runtime
+    side; every stage's device set must fit the mesh, and (when the arch is
+    given) the plan must not reference cores the architecture doesn't have
+    — a corrupted or hand-edited record fails here, not inside XLA.
+    """
+    need = plan.n_devices_needed
+    if arch is not None and need > arch.n_cores:
+        raise ValueError(
+            f"plan references core {need - 1} but the checkpointed arch "
+            f"has only {arch.n_cores} cores — corrupt mapping record")
+    if need > n_devices:
+        from ..launch.mesh import DRYRUN_ENV_FIX
+        raise ValueError(
+            f"plan needs {need} devices, mesh/pool has {n_devices}; "
+            f"on a CPU host, {DRYRUN_ENV_FIX}")
+    for i, st in enumerate(plan.stages):
+        for name in st.layers:
+            part = st.parts[name]
+            cg = st.cgs[name]
+            p = part[0] * part[1] * part[2] * part[3]
+            if p != len(cg):
+                raise ValueError(
+                    f"stage {i} layer {name}: Part {part} product {p} != "
+                    f"|CG| {len(cg)}")
+
+
+def plans_for(cands: Sequence[RealizeCandidate], n_devices: int
+              ) -> List[Tuple[RealizeCandidate, MeshPlan]]:
+    """Lower + validate every candidate against a device budget."""
+    out = []
+    for c in cands:
+        plan = c.lower()
+        validate_plan(plan, n_devices, c.arch)
+        out.append((c, plan))
+    return out

@@ -63,6 +63,10 @@ class PipelineExec:
                            for i in range(len(self.plan.stages))]
 
     def _stage_device(self, si: int):
+        # plan core ids are flat device indices; a pool smaller than the
+        # plan FOLDS (modulo) so the demonstration executor still runs on
+        # a 1-device host — the realization subsystem is the strict path
+        # (realize.plan.validate_plan refuses plans the pool cannot host)
         devs = self.plan.stages[si].devices
         return self.devices[devs[0] % len(self.devices)]
 

@@ -344,3 +344,102 @@ def test_joint_reuse_dse_ranks_and_parallelizes():
     par = joint_reuse_dse(bases, (1, 4), {"TF": g}, _cfg(iters=40),
                           n_workers=2)
     assert [(b, p) for b, p in serial] == [(b, p) for b, p in par]
+
+
+# ---------------------------------------------------------------------------
+# Adaptive (gap-rule) screening
+# ---------------------------------------------------------------------------
+
+def test_adaptive_screening_prunes_and_is_deterministic(tmp_path):
+    g = _tf_small()
+    cands = _grid(8)
+    ck = tmp_path / "auto.ckpt.jsonl"
+    with ExplorationEngine({"TF": g}, _cfg(), checkpoint=ck) as eng:
+        pts = eng.run(cands, screen_keep="auto")
+        screen = eng.last_screen
+    assert 1 <= len(pts) <= len(cands)
+    assert screen is not None and len(screen) == len(cands)
+    objs = [p.objective for p in pts]
+    assert objs == sorted(objs)
+    # every kept candidate matches the exhaustive sweep's value for the
+    # same index (adaptive mode must not perturb per-task seeds)
+    full = {p.arch: p.objective for p in run_dse(cands, {"TF": g}, _cfg())}
+    for p in pts:
+        assert p.objective == full[p.arch]
+    # results sorted best-first (the gap rule is a heuristic — pruned
+    # candidates are assumed, not proven, unable to beat the kept best)
+    assert pts[0].objective == min(objs)
+    # resume from the checkpoint replays identically
+    with ExplorationEngine({"TF": g}, _cfg(), checkpoint=ck) as eng:
+        again = eng.run(cands, screen_keep="auto")
+    assert _sig(pts) == _sig(again)
+
+
+def test_adaptive_screening_rejects_shards_and_bad_modes():
+    g = _tf_small()
+    cands = _grid(4)
+    with ExplorationEngine({"TF": g}, _cfg()) as eng:
+        with pytest.raises(ValueError, match="adaptive screening"):
+            eng.run(cands, screen_keep="auto", shard=(0, 2))
+        with pytest.raises(ValueError, match="fraction or 'auto'"):
+            eng.run(cands, screen_keep="later")
+        # single candidate / no SA: 'auto' degrades to exhaustive
+        only = eng.run(cands[:1], screen_keep="auto")
+        assert len(only) == 1
+        tmap = eng.run(cands, use_sa=False, screen_keep="auto")
+        assert len(tmap) == len(cands)
+
+
+# ---------------------------------------------------------------------------
+# Replica-exchange swap diagnostics
+# ---------------------------------------------------------------------------
+
+def test_replica_exchange_records_swap_acceptance():
+    arch = simba_arch()
+    g = _tf_small()
+    groups = partition_graph(g, arch, 8)
+    cfg = SAConfig(iters=200, seed=0, n_chains=4, swap_every=25)
+    res = replica_exchange_sa(g, arch, groups, 8, cfg)
+    # ladder = chains 1..3 -> 2 adjacent pairs, iters/swap_every attempts
+    assert res.swap_attempts == [200 // 25] * 2
+    assert all(0 <= a <= t for a, t in
+               zip(res.swap_accepts, res.swap_attempts))
+    assert len(res.swap_rates()) == 2
+    # single chain: no ladder, no stats
+    single = sa_optimize(g, arch, groups, 8, SAConfig(iters=50, seed=0))
+    assert single.swap_attempts == [] and single.swap_rates() == []
+
+
+def test_single_chain_checkpoint_survives_re_knob_defaults(tmp_path):
+    """The retune moved the (inert for n_chains=1) replica-exchange
+    defaults; checkpoints written under the old (50, 3.0) defaults are
+    value-identical and must resume, not be discarded."""
+    g = _tf_small()
+    cands = _grid(3)
+    ck = tmp_path / "old.ckpt.jsonl"
+    with ExplorationEngine({"TF": g}, _cfg()) as eng:
+        pts = eng.run(cands)
+        # rewrite the checkpoint as the pre-retune engine would have
+        sweep = eng._open_sweep(ck, use_sa=True)
+        old_fp = eng._fingerprint(True, re_knobs=(50, 3.0))
+        assert old_fp != eng._fingerprint(True)
+        lines = [json.dumps({"_config": old_fp})]
+        for i, p in enumerate(pts):
+            for wl, (e, d) in p.per_workload.items():
+                from repro.core.explore import task_checkpoint_key
+                from repro.core.explore import derive_task_seed
+                ci = cands.index(p.arch)
+                lines.append(json.dumps(
+                    {"_key": task_checkpoint_key(p.arch, wl),
+                     "seed": derive_task_seed(eng.cfg.sa.seed, ci, 0),
+                     "workload": wl, "arch": arch_to_dict(p.arch),
+                     "energy_j": e, "delay_s": d}))
+        ck.write_text("\n".join(lines) + "\n")
+    with ExplorationEngine({"TF": g}, _cfg(), checkpoint=ck,
+                           progress=True) as eng2:
+        resumed = eng2.run(cands)
+    assert _sig(resumed) == _sig(pts)
+    # the file was migrated in place to the current fingerprint
+    head = json.loads(ck.read_text().splitlines()[0])
+    with ExplorationEngine({"TF": g}, _cfg()) as eng3:
+        assert head["_config"] == eng3._fingerprint(True)
