@@ -3,21 +3,53 @@
 ``python -m benchmarks.run [--force] [--only fig5,...]``
 prints a ``name,us_per_call,derived`` CSV summary at the end.  Results are
 cached under results/bench_*.json (delete or --force to recompute).
+
+``python -m benchmarks.run --json [PATH] [--quick]`` instead measures the
+DSE perf trajectory — evaluator / SA / screening throughput, before and
+after the batched evaluation engine (the "before" legs are the preserved
+per-candidate / serial-loop code paths plus the committed
+``benchmarks/pr4_baseline.json`` cross-tree measurement) — and writes it
+as machine-readable JSON (default ``BENCH_dse.json`` at the repo root).
+CI uploads the file as an artifact on every bench-smoke run.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 from .common import csv_line
+
+BENCH_JSON_DEFAULT = Path(__file__).resolve().parent.parent / "BENCH_dse.json"
+
+
+def write_bench_json(path: Path, quick: bool = False) -> None:
+    from . import misc_bench
+
+    t0 = time.time()
+    data = misc_bench.dse_bench(quick=quick)
+    data["quick_rounds"] = quick
+    data["_wall_s"] = time.time() - t0
+    path.write_text(json.dumps(data, indent=1, default=float) + "\n")
+    print(f"[bench] DSE perf trajectory -> {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", nargs="?", const=str(BENCH_JSON_DEFAULT),
+                    default=None, metavar="PATH",
+                    help="measure the DSE perf trajectory and write "
+                    "BENCH_dse.json instead of running the figure suite")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --json: fewer timing rounds (CI bench-smoke)")
     args = ap.parse_args()
+    if args.json is not None:
+        write_bench_json(Path(args.json), quick=args.quick)
+        return
     only = set(args.only.split(",")) if args.only else None
 
     lines = []

@@ -28,14 +28,40 @@ computation, keeping cached and uncached results bit-identical.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .encoding import LMS, MS, Region, parse_regions_arrays
+from .encoding import (LMS, LMSBatch, MS, Region, parse_regions_arrays,
+                       unpack_lms_batch)
 from .hw import ArchConfig
 from .intra_core import explore_intra_core_many
 from .workload import Graph, Layer, LayerGroup
+
+
+# jitted segment-sum replay of the opt-in ``backend="jax"`` batch path;
+# built lazily so importing the analyzer never pulls in jax
+_JAX_REPLAY_FN = None
+
+
+def _jax_replay(idx: np.ndarray, vals: np.ndarray, n: int) -> np.ndarray:
+    global _JAX_REPLAY_FN
+    if _JAX_REPLAY_FN is None:
+        from functools import partial
+
+        import jax
+        import jax.numpy as jnp
+
+        @partial(jax.jit, static_argnums=2)
+        def _replay(i, v, length):
+            return jax.ops.segment_sum(v, i, num_segments=length)
+
+        def fn(i, v, length):
+            return np.asarray(_replay(jnp.asarray(i), jnp.asarray(v), length),
+                              dtype=np.float64)
+
+        _JAX_REPLAY_FN = fn
+    return _JAX_REPLAY_FN(idx, vals, n)
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +104,8 @@ def _build_grid(arch: ArchConfig) -> RouterGrid:
             is_d2d[north_id(x, y + 1)] = d2d
 
     max_len = (gw - 1) + (gh - 1)
-    paths = np.full((n_nodes, n_nodes, max(max_len, 1)), -1, dtype=np.int32)
+    # int64 so gathered edge ids feed Contribution.add's fast path directly
+    paths = np.full((n_nodes, n_nodes, max(max_len, 1)), -1, dtype=np.int64)
     plen = np.zeros((n_nodes, n_nodes), dtype=np.int32)
     hops_d2d = np.zeros((n_nodes, n_nodes), dtype=np.int32)
     for a in range(n_nodes):
@@ -149,6 +176,23 @@ class GroupAnalysis:
         return float(self.edge_bytes[g.edge_is_d2d].sum())
 
 
+@dataclass
+class GroupAnalysisBatch:
+    """B :class:`GroupAnalysis` rows sharing one flat ``(B, buf_len)``
+    accumulator buffer.  ``analyses[b]``'s arrays are views of ``buf[b]``,
+    so the batched evaluator can run its math once over the 2-D slices
+    (``target``) while every row remains a full, cache-storable
+    ``GroupAnalysis``."""
+    analyses: List[GroupAnalysis]
+    buf: np.ndarray                  # (B, buf_len)
+    layout: List[Tuple[int, int]]    # per-T_* target (lo, hi) columns
+    weight_totals: np.ndarray        # (B,)
+
+    def target(self, t: int) -> np.ndarray:
+        lo, hi = self.layout[t]
+        return self.buf[:, lo:hi]
+
+
 def _regions_to_array(regions: Dict[int, Region]) -> Tuple[np.ndarray, np.ndarray]:
     cores = np.array(sorted(regions), dtype=np.int64)
     arr = np.array([[regions[c].h0, regions[c].h1, regions[c].w0, regions[c].w1,
@@ -204,16 +248,23 @@ class Contribution:
         self.weight_total = 0.0
 
     def add(self, target: int, idx, vals) -> None:
-        idx = np.asarray(idx, dtype=np.int64)
-        if idx.ndim != 1:
-            idx = idx.reshape(-1)
+        # fast path: well-formed arrays (the overwhelming majority of the
+        # call sites) skip the conversion checks — this method runs tens of
+        # thousands of times per SA second
+        if not (type(idx) is np.ndarray and idx.dtype == np.int64
+                and idx.ndim == 1):
+            idx = np.asarray(idx, dtype=np.int64)
+            if idx.ndim != 1:
+                idx = idx.reshape(-1)
         if idx.size == 0:
             return
-        vals = np.asarray(vals, dtype=np.float64)
-        if vals.ndim == 0:
-            vals = np.broadcast_to(vals, idx.shape)
-        elif vals.ndim != 1:
-            vals = vals.reshape(-1)
+        if not (type(vals) is np.ndarray and vals.dtype == np.float64
+                and vals.ndim == 1 and vals.size == idx.size):
+            vals = np.asarray(vals, dtype=np.float64)
+            if vals.ndim == 0:
+                vals = np.broadcast_to(vals, idx.shape)
+            elif vals.ndim != 1:
+                vals = vals.reshape(-1)
         self._parts.append((target, idx, vals))
 
     def seal(self, offsets: Sequence[int]) -> "Contribution":
@@ -249,6 +300,18 @@ class _LRU(dict):
         return value
 
 
+# Process-wide second-level cache for PURE LAYER GEOMETRY artifacts (region
+# tables, needed-ifmap rows, sibling labels, overlap counts, intra-core
+# dataflow stats).  These depend only on frozen Layer content + Part (+ the
+# few arch constants in their keys), never on the graph or the core
+# binding, so every Analyzer — across SA chains, sweep candidates and
+# fresh evaluators — shares one copy.  Per-analyzer first-level caches
+# keep the hot hit path on small-int keys; this table is consulted (and
+# filled) only on a first-level miss, paying one frozen-dataclass hash.
+# Entries are read-only by contract.
+_GEO_CACHE = _LRU(262_144)
+
+
 class Analyzer:
     """Stateful per-(arch, graph) analyzer; reused across SA iterations."""
 
@@ -260,18 +323,26 @@ class Analyzer:
             [arch.core_node(c) for c in range(arch.n_cores)], dtype=np.int64)
         self._dram_nodes = np.array(
             [arch.dram_node(d) for d in range(1, arch.n_dram + 1)], dtype=np.int64)
-        # (src, dst) -> boolean edge membership of the XY path; turns the
-        # per-multicast path-union into a gather + OR-reduce.  Dense, so
-        # gate on size (a 12x12 grid is ~12 MB; fall back to sorting above)
+        # (src, dst) -> PACKED edge membership of the XY path (uint64
+        # bitsets, bit e of word e // 64 = edge e): turns the per-multicast
+        # path-union into a gather + bitwise-OR reduce at 1/8th the memory
+        # traffic of a boolean mask.  Bit order relies on little-endian
+        # uint64 <-> uint8 views (every supported target); gate on size
+        # (fall back to sorting above on absurd grids).
         grid = self.grid
-        if grid.n_nodes * grid.n_nodes * grid.n_edges <= 64_000_000:
-            pm = np.zeros((grid.n_nodes, grid.n_nodes, grid.n_edges),
-                          dtype=bool)
+        import sys as _sys
+        n_words = -(-grid.n_edges // 64)
+        if (_sys.byteorder == "little"
+                and grid.n_nodes * grid.n_nodes * n_words * 8 <= 64_000_000):
+            bits = np.zeros((grid.n_nodes, grid.n_nodes, n_words),
+                            dtype=np.uint64)
             ii, jj, kk = np.nonzero(grid.paths >= 0)
-            pm[ii, jj, grid.paths[ii, jj, kk]] = True
-            self._path_mask: Optional[np.ndarray] = pm
+            ee = grid.paths[ii, jj, kk]
+            np.bitwise_or.at(bits, (ii, jj, ee // 64),
+                             np.uint64(1) << (ee % 64).astype(np.uint64))
+            self._path_bits: Optional[np.ndarray] = bits
         else:
-            self._path_mask = None
+            self._path_bits = None
         # intern small ints for layers/groups: cache keys hash ints, not
         # string tuples
         self._layer_idx = {name: i for i, name in enumerate(g.layers)}
@@ -290,6 +361,7 @@ class Analyzer:
         self._rarr_cache = _LRU(cache_size)       # regions as (cores, array)
         self._node_cache = _LRU(cache_size)       # region cores -> grid nodes
         self._needgeo_cache = _LRU(cache_size)    # need rows (per Part)
+        self._needgrp_cache = _LRU(cache_size)    # sibling labels (per Part)
         self._ov_cache = _LRU(cache_size)         # overlap counts (per Part)
         self._intra_cache = _LRU(cache_size)      # intra-core t/rd/wr (per Part)
         self._need_cache = _LRU(cache_size)       # consumer need regions
@@ -300,15 +372,16 @@ class Analyzer:
     # -- routing helpers -----------------------------------------------------
     def _route(self, contrib: Contribution, target: int, src_nodes: np.ndarray,
                dst_nodes: np.ndarray, vols: np.ndarray) -> None:
-        """Record unicast volumes onto edge loads (vectorized)."""
-        mask = vols > 0
-        if not mask.any():
-            return
-        s, d, v = src_nodes[mask], dst_nodes[mask], vols[mask]
-        paths = self.grid.paths[s, d]            # (n, max_len)
+        """Record unicast volumes onto edge loads (vectorized).
+
+        Zero-volume rows are routed too (their edge cells receive exact
+        ``+0.0`` no-ops, so the replayed sums are bit-identical to
+        filtering them out) — dropping the positivity filter saves four
+        array ops on a path hot enough for that to matter."""
+        paths = self.grid.paths[src_nodes, dst_nodes]   # (n, max_len)
         flat = paths.reshape(-1)
         keep = flat >= 0
-        contrib.add(target, flat[keep], np.repeat(v, paths.shape[1])[keep])
+        contrib.add(target, flat[keep], np.repeat(vols, paths.shape[1])[keep])
 
     def _route_multicast(self, contrib: Contribution, target: int,
                          src_node: int, dst_nodes: Sequence[int],
@@ -332,10 +405,15 @@ class Analyzer:
         key = (self._layer_idx[name], part, bu)
         hit = self._table_cache.get(key)
         if hit is None:
-            ms = MS(part=part, cg=tuple(range(int(np.prod(part)))),
-                    fd=(-1, -1, -1))
-            _, rarr = parse_regions_arrays(ms, self.g.layers[name], bu)
-            hit = self._table_cache.put(key, rarr)
+            lyr = self.g.layers[name]
+            gkey = ("rg", lyr, part, bu)
+            hit = _GEO_CACHE.get(gkey)
+            if hit is None:
+                ms = MS(part=part, cg=tuple(range(int(np.prod(part)))),
+                        fd=(-1, -1, -1))
+                _, rarr = parse_regions_arrays(ms, lyr, bu)
+                hit = _GEO_CACHE.put(gkey, rarr)
+            self._table_cache.put(key, hit)
         return hit
 
     def region_table(self, name: str, ms: MS, bu: int
@@ -381,10 +459,15 @@ class Analyzer:
         key = (self._layer_idx[cname], c_part, bu, prod_K)
         hit = self._needgeo_cache.get(key)
         if hit is None:
-            hit = self._needgeo_cache.put(
-                key, self._ifmap_regions(self.g.layers[cname],
-                                         self.region_geometry(cname, c_part,
-                                                              bu), prod_K))
+            cons = self.g.layers[cname]
+            gkey = ("need", cons, c_part, bu, prod_K)
+            hit = _GEO_CACHE.get(gkey)
+            if hit is None:
+                hit = _GEO_CACHE.put(
+                    gkey, self._ifmap_regions(cons,
+                                              self.region_geometry(
+                                                  cname, c_part, bu), prod_K))
+            self._needgeo_cache.put(key, hit)
         return hit
 
     def _intra_geometry(self, name: str, part: Tuple[int, ...], bu: int
@@ -394,8 +477,13 @@ class Analyzer:
         only: row i belongs to whatever core CG[i] names."""
         key = (self._layer_idx[name], part, bu)
         hit = self._intra_cache.get(key)
+        if hit is not None:
+            return hit
+        arch, lyr = self.arch, self.g.layers[name]
+        gkey = ("intra", lyr, part, bu, arch.core_glb_bytes,
+                arch.macs_per_core, arch.freq_ghz)
+        hit = _GEO_CACHE.get(gkey)
         if hit is None:
-            arch, lyr = self.arch, self.g.layers[name]
             rarr = self.region_geometry(name, part, bu)
             spans = rarr[:, 1::2] - rarr[:, 0::2]       # (N, 4): h, w, b, k
             elems = spans[:, 0] * spans[:, 1] * spans[:, 2] * spans[:, 3]
@@ -413,7 +501,8 @@ class Analyzer:
             mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
             peak = arch.macs_per_core * arch.freq_ghz * 1e9
             t = (elems * mac_per_elem) / (peak * np.maximum(util, 1e-3))
-            hit = self._intra_cache.put(key, (t, rd, wr))
+            hit = _GEO_CACHE.put(gkey, (t, rd, wr))
+        self._intra_cache.put(key, hit)
         return hit
 
     def _overlap_geometry(self, pname: str, p_part: Tuple[int, ...],
@@ -424,10 +513,15 @@ class Analyzer:
                self._layer_idx[cname], c_part, bu, prod_K)
         hit = self._ov_cache.get(key)
         if hit is None:
-            ov = _overlap_matrix(self.region_geometry(pname, p_part, bu),
-                                 self._need_geometry(cname, c_part, bu,
-                                                     prod_K))
-            hit = self._ov_cache.put(key, (ov, bool(ov.any())))
+            gkey = ("ov", self.g.layers[pname], p_part,
+                    self.g.layers[cname], c_part, bu, prod_K)
+            hit = _GEO_CACHE.get(gkey)
+            if hit is None:
+                ov = _overlap_matrix(self.region_geometry(pname, p_part, bu),
+                                     self._need_geometry(cname, c_part, bu,
+                                                         prod_K))
+                hit = _GEO_CACHE.put(gkey, (ov, bool(ov.any())))
+            self._ov_cache.put(key, hit)
         return hit
 
     @staticmethod
@@ -456,6 +550,24 @@ class Analyzer:
         need[:, 7] = prod_K
         return need
 
+    def _need_labels(self, cname: str, c_part: Tuple[int, ...], bu: int,
+                     prod_K: int) -> np.ndarray:
+        """Sibling-equivalence label per correspondence-order need row
+        (rows with identical content share a label).  Pure geometry —
+        cached per Part, so the per-CG grouping below reduces to integer
+        ops on a permutation of these labels."""
+        key = (self._layer_idx[cname], c_part, bu, prod_K)
+        hit = self._needgrp_cache.get(key)
+        if hit is None:
+            gkey = ("lbl", self.g.layers[cname], c_part, bu, prod_K)
+            hit = _GEO_CACHE.get(gkey)
+            if hit is None:
+                need_geo = self._need_geometry(cname, c_part, bu, prod_K)
+                _, inv = np.unique(need_geo, axis=0, return_inverse=True)
+                hit = _GEO_CACHE.put(gkey, inv.reshape(-1).astype(np.int64))
+            self._needgrp_cache.put(key, hit)
+        return hit
+
     def _need_arrays(self, cname: str, cms: MS, bu: int, prod_K: int
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Needed producer-ofmap region per consumer part (sorted-core order),
@@ -463,21 +575,34 @@ class Analyzer:
         (K-partition siblings) as a padded member matrix.
 
         Returns (need (Q,8), first (G,) first member of each sibling group in
-        first-seen order, members (G,Qmax) member indices padded with -1)."""
+        first-seen order, members (G,Qmax) member indices padded with -1).
+
+        The grouping reproduces the historical dict-of-lists scan exactly
+        — groups enumerate in first-seen order over the sorted-core
+        positions, members ascending within a group — but runs as a
+        handful of integer-array ops on the cached per-Part sibling
+        labels instead of a Python loop over row tuples."""
         key = (self._layer_idx[cname], cms.geo, bu, prod_K)
         hit = self._need_cache.get(key)
         if hit is None:
             c_cores, _, c_ord = self._region_arrays(cname, cms, bu)
             need = self._need_geometry(cname, cms.part, bu, prod_K)[c_ord]
-            groups: Dict[Tuple, List[int]] = {}
-            for qi, row in enumerate(need.tolist()):
-                groups.setdefault(tuple(row), []).append(qi)
-            first = np.array([qis[0] for qis in groups.values()],
-                             dtype=np.int64)
-            qmax = max((len(q) for q in groups.values()), default=0)
-            members = np.full((len(groups), qmax), -1, dtype=np.int64)
-            for gi, qis in enumerate(groups.values()):
-                members[gi, :len(qis)] = qis
+            labels = self._need_labels(cname, cms.part, bu, prod_K)[c_ord]
+            uniq, first_pos = np.unique(labels, return_index=True)
+            order = np.argsort(first_pos, kind="stable")   # first-seen order
+            G = len(uniq)
+            rank = np.empty(int(uniq.max()) + 1 if G else 1, dtype=np.int64)
+            rank[uniq[order]] = np.arange(G)
+            r = rank[labels]                   # group row per position
+            counts = np.bincount(r, minlength=G).astype(np.int64)
+            qmax = int(counts.max()) if G else 0
+            ordered = np.argsort(r, kind="stable")   # grouped, qi ascending
+            off = np.concatenate(([0], np.cumsum(counts)[:-1])).astype(
+                np.int64) if G else np.zeros(0, np.int64)
+            members = np.full((G, qmax), -1, dtype=np.int64)
+            rr = r[ordered]
+            members[rr, np.arange(len(rr)) - off[rr]] = ordered
+            first = members[:, 0].copy() if qmax else np.zeros(0, np.int64)
             pad = members < 0
             c_nodes = self._region_nodes(cname, cms, bu)
             cn = np.where(pad, -1, c_nodes[members])
@@ -576,25 +701,14 @@ class Analyzer:
         return hit
 
     # -- main entry ------------------------------------------------------------
-    def analyze(self, group: LayerGroup, lms: LMS, total_batch: int) -> GroupAnalysis:
-        arch, g = self.arch, self.g
-        bu = group.batch_unit
-        n_passes = max(1, -(-total_batch // bu))
-
-        buf = np.zeros(self._buf_len)
-        arrays = [buf[lo:hi] for lo, hi in self._layout]
+    def _gather_stream(self, group: LayerGroup, lms: LMS, bu: int,
+                       n_passes: int, gid: int, chunks_i: List[np.ndarray],
+                       chunks_v: List[np.ndarray]) -> float:
+        """Append one mapping's contribution chunks in the canonical replay
+        order (per layer: pre, internal-dep edges, post); returns the
+        mapping's weight-DRAM total.  Shared by the scalar and batched
+        paths, so both replay the exact same per-buffer add sequence."""
         weight_total = 0.0
-        gid = self._group_ids.setdefault(group.names, len(self._group_ids))
-
-        regions_of: Dict[str, Dict[int, Region]] = {}
-        for name in group.names:
-            regions_of[name] = self.regions(name, lms.ms[name], bu)
-
-        # gather every contribution's flat stream, concatenate once, replay
-        # with a single np.add.at — concatenation preserves the add order,
-        # so this is bit-identical to applying the contributions one by one
-        chunks_i: List[np.ndarray] = []
-        chunks_v: List[np.ndarray] = []
         for name, internal_preds in self._group_topology(group):
             pre, post = self._layer_contribs(name, lms.ms[name], bu,
                                              n_passes, group, gid)
@@ -605,19 +719,123 @@ class Analyzer:
                                   lms.ms[name], bu).collect(chunks_i,
                                                             chunks_v)
             post.collect(chunks_i, chunks_v)
-        if chunks_i:
-            np.add.at(buf, np.concatenate(chunks_i),
-                      np.concatenate(chunks_v))
+        return weight_total
 
+    def _wrap_analysis(self, buf: np.ndarray, group: LayerGroup, lms: LMS,
+                       bu: int, weight_total: float) -> GroupAnalysis:
+        """View one replayed accumulator buffer as a :class:`GroupAnalysis`.
+
+        ``layer_parts`` is left empty: only the seed reference engine
+        consumes it (from its own analyses); eagerly materializing the
+        Region dicts cost a measurable slice of every SA iteration.
+        Callers that want the tables use :meth:`regions` directly.
+        """
+        arrays = [buf[lo:hi] for lo, hi in self._layout]
         return GroupAnalysis(
-            arch=arch, batch_unit=bu, core_macs=arrays[T_CORE_MACS],
+            arch=self.arch, batch_unit=bu, core_macs=arrays[T_CORE_MACS],
             edge_bytes=arrays[T_EDGE], edge_bytes_amortized=arrays[T_EDGE_AM],
             dram_bytes=arrays[T_DRAM], dram_bytes_amortized=arrays[T_DRAM_AM],
             core_glb_need=arrays[T_GLB], core_in_bytes=arrays[T_CORE_IN],
             core_out_bytes=arrays[T_CORE_OUT],
             weight_dram_bytes_total=weight_total,
-            layer_parts=regions_of,
             core_time_s=arrays[T_CORE_TIME], glb_rw_bytes=arrays[T_GLB_RW])
+
+    def analyze(self, group: LayerGroup, lms: LMS, total_batch: int) -> GroupAnalysis:
+        bu = group.batch_unit
+        n_passes = max(1, -(-total_batch // bu))
+        gid = self._group_ids.setdefault(group.names, len(self._group_ids))
+
+        # gather every contribution's flat stream, concatenate once, replay
+        # with a single np.bincount — which accumulates elements in array
+        # order exactly like unbuffered np.add.at (per cell, the adds land
+        # in the same sequence), so this is bit-identical to applying the
+        # contributions one by one, at a fraction of ufunc.at's dispatch
+        # cost
+        chunks_i: List[np.ndarray] = []
+        chunks_v: List[np.ndarray] = []
+        weight_total = self._gather_stream(group, lms, bu, n_passes, gid,
+                                           chunks_i, chunks_v)
+        if chunks_i:
+            buf = np.bincount(np.concatenate(chunks_i),
+                              weights=np.concatenate(chunks_v),
+                              minlength=self._buf_len)
+        else:
+            buf = np.zeros(self._buf_len)
+        return self._wrap_analysis(buf, group, lms, bu, weight_total)
+
+    def analyze_requests(self, requests: Sequence[Tuple[LayerGroup, LMS]],
+                         total_batch: int,
+                         backend: str = "numpy") -> GroupAnalysisBatch:
+        """Analyze a mixed batch of (group, lms) requests in ONE replay.
+
+        Row ``b`` of the result is bit-identical to
+        ``analyze(requests[b][0], requests[b][1], total_batch)``: every
+        request's contribution chunks are gathered in the scalar order,
+        offset into its own ``buf_len`` window of one flat
+        ``(B * buf_len,)`` buffer, and the whole batch replays through one
+        ``np.bincount`` — rows never share a cell and per-row add order is
+        the concatenation order, so the float-add sequence of each row is
+        exactly the scalar one.  Requests may mix layer groups (the buffer
+        layout is per-arch, shared by all groups), which is what lets the
+        lockstep SA evaluate one whole iteration in a single pass.
+
+        ``backend="jax"`` replays via a jitted ``segment_sum`` instead
+        (accelerator runs).  Segment reduction does NOT preserve the add
+        order (and runs float32 under jax's default x64-disabled config),
+        so it is parity-grade (~1e-4), never bit-identical, and never the
+        default.
+        """
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown analyze batch backend {backend!r}")
+        B = len(requests)
+        chunks_i: List[np.ndarray] = []
+        chunks_v: List[np.ndarray] = []
+        bases: List[int] = []
+        weight_totals = np.empty(B)
+        for b, (group, lms) in enumerate(requests):
+            bu = group.batch_unit
+            n_passes = max(1, -(-total_batch // bu))
+            gid = self._group_ids.setdefault(group.names,
+                                             len(self._group_ids))
+            n0 = len(chunks_i)
+            weight_totals[b] = self._gather_stream(group, lms, bu, n_passes,
+                                                   gid, chunks_i, chunks_v)
+            bases.extend([b * self._buf_len] * (len(chunks_i) - n0))
+        if chunks_i:
+            idx = np.concatenate(chunks_i)
+            lens = np.fromiter((c.size for c in chunks_i), np.int64,
+                               len(chunks_i))
+            idx += np.repeat(np.asarray(bases, dtype=np.int64), lens)
+            vals = np.concatenate(chunks_v)
+            if backend == "jax":
+                buf = _jax_replay(idx, vals, B * self._buf_len)
+            else:
+                buf = np.bincount(idx, weights=vals,
+                                  minlength=B * self._buf_len)
+        else:
+            buf = np.zeros(B * self._buf_len)
+        buf2 = buf.reshape(B, self._buf_len)
+        analyses = [self._wrap_analysis(buf2[b], group, lms,
+                                        group.batch_unit,
+                                        float(weight_totals[b]))
+                    for b, (group, lms) in enumerate(requests)]
+        return GroupAnalysisBatch(analyses=analyses, buf=buf2,
+                                  layout=self._layout,
+                                  weight_totals=weight_totals)
+
+    def analyze_batch(self, group: LayerGroup,
+                      lms_batch: "Union[Sequence[LMS], LMSBatch]",
+                      total_batch: int,
+                      backend: str = "numpy") -> GroupAnalysisBatch:
+        """Analyze B mappings of ONE layer group in a single replay pass
+        (:meth:`analyze_requests` with a constant group; accepts either a
+        sequence of ``LMS`` or a packed SoA :class:`LMSBatch`)."""
+        if isinstance(lms_batch, LMSBatch):
+            lms_list: Sequence[LMS] = unpack_lms_batch(lms_batch)
+        else:
+            lms_list = list(lms_batch)
+        return self.analyze_requests([(group, lms) for lms in lms_list],
+                                     total_batch, backend=backend)
 
     # -- pieces ---------------------------------------------------------------
     def _external_ifmap_bytes(self, lyr: Layer, rarr: np.ndarray,
@@ -646,14 +864,23 @@ class Analyzer:
         if np.ndim(vols) == 0:
             vols = np.full(len(nodes), float(vols))
         if fd == 0:
-            share = vols / self.arch.n_dram
-            for d in range(self.arch.n_dram):
-                dn = np.full(len(nodes), self._dram_nodes[d])
-                if to_core:
-                    self._route(contrib, etarget, dn, nodes, share)
-                else:
-                    self._route(contrib, etarget, nodes, dn, share)
-                contrib.add(dtarget, d, float(share.sum()))
+            # one route call covering every port: concatenating the
+            # per-port (src, dst, vol) rows in port order preserves the
+            # per-edge-cell add sequence of the historical per-port loop
+            # (cross-target chunk order is free — edge and DRAM cells
+            # never share a buffer cell), so the stream is bit-identical
+            nd = self.arch.n_dram
+            share = vols / nd
+            dn = np.repeat(self._dram_nodes[:nd], len(nodes))
+            cn = np.concatenate([nodes] * nd)
+            sh = np.concatenate([share] * nd)
+            if to_core:
+                self._route(contrib, etarget, dn, cn, sh)
+            else:
+                self._route(contrib, etarget, cn, dn, sh)
+            s = float(share.sum())
+            contrib.add(dtarget, np.arange(nd, dtype=np.int64),
+                        np.full(nd, s))
         else:
             d = fd - 1
             dn = np.full(len(nodes), self._dram_nodes[d])
@@ -686,7 +913,6 @@ class Analyzer:
                                                 cms.part, bu, prod.K)
         if not any_ov:
             return
-        ov = ov_geo[p_ord[:, None], c_ord[None, :]]   # (P, Q) elems
         p_nodes = self._region_nodes(pname, pms, bu)
         c_nodes = self._region_nodes(cname, cms, bu)
 
@@ -694,10 +920,13 @@ class Analyzer:
         if contracting:
             # one 3-d batch over (sibling group g, producer part p, member q);
             # the accumulation order is (g, p, q) — the order of the
-            # historical nested loop
+            # historical nested loop.  Only sibling-first columns of the
+            # overlap table are needed (identical need rows have identical
+            # overlaps), so the permute gathers (P, G), not (P, Q).
             G, Qmax = mc_members.shape
             P = len(p_cores)
-            vols = ov[:, mc_first].T * np.float64(bpe)        # (G, P)
+            vols = ov_geo[p_ord[:, None],
+                          c_ord[mc_first][None, :]].T * np.float64(bpe)
             cn = mc_cn                                        # (G, Qmax)
             off_node = (p_nodes[None, :, None] != cn[:, None, :]) \
                 & mc_live[:, None, :]                         # (G, P, Qmax)
@@ -706,11 +935,23 @@ class Analyzer:
             # union of XY paths per (g, p) over its off-node members; both
             # forms produce the edge ids ascending per (g, p) row — the
             # sorted-unique set np.unique would give
-            if self._path_mask is not None:
-                pm = self._path_mask[p_nodes[None, :, None], cn[:, None, :]]
-                union = (pm & act[..., None]).any(axis=2)     # (G, P, E)
-                union = union.reshape(G * P, -1)
-                gp_idx, e_idx = np.nonzero(union)
+            if self._path_bits is not None:
+                # packed-bitset union: redirect inactive members to the
+                # (p, p) diagonal — whose XY path, hence bitset, is empty —
+                # gather (G, P, Q, W) uint64 words and OR-reduce over
+                # members, then unpack once.  Little-endian uint64 -> uint8
+                # views keep bit j of word w at unpacked position 64 * w +
+                # 8 * byte + bit == edge id, so nonzero yields edges
+                # ascending per (g, p) row exactly like a boolean path
+                # mask would.
+                p_broad = np.broadcast_to(p_nodes[None, :, None], act.shape)
+                cn_eff = np.where(act, cn[:, None, :], p_broad)
+                pb = self._path_bits[p_broad, cn_eff]
+                union_bits = np.bitwise_or.reduce(pb, axis=2)  # (G, P, W)
+                ub = np.unpackbits(
+                    union_bits.reshape(G * P, -1).view(np.uint8),
+                    axis=1, bitorder="little")
+                gp_idx, e_idx = np.nonzero(ub)
                 contrib.add(T_EDGE, e_idx,
                             vols.reshape(-1)[gp_idx])
             else:
@@ -725,15 +966,23 @@ class Analyzer:
                 keep = (srt >= 0) & first
                 contrib.add(T_EDGE, srt[keep],
                             np.repeat(vols.reshape(-1), keep.sum(axis=1)))
+            # full-form records: dead (g, p[, q]) rows land exact +0.0
+            # no-ops on valid cells (pad members index c_cores[-1], a real
+            # core, with volume 0), which leaves every per-cell float sum
+            # bit-identical to the filtered form while skipping two
+            # nonzero scans and their gathers
             has_dst = off_node.any(axis=2)                    # (G, P)
-            g_idx, p_idx = np.nonzero(live)
-            contrib.add(T_CORE_OUT, p_cores[p_idx],
-                        (vols * has_dst)[g_idx, p_idx])
+            contrib.add(T_CORE_OUT,
+                        np.broadcast_to(p_cores[None, :],
+                                        vols.shape).reshape(-1),
+                        (vols * has_dst).reshape(-1))
             # each off-node member receives the full volume
-            g_idx, p_idx, q_idx = np.nonzero(act)
-            contrib.add(T_CORE_IN, c_cores[mc_members[g_idx, q_idx]],
-                        vols[g_idx, p_idx])
+            contrib.add(T_CORE_IN,
+                        np.broadcast_to(c_cores[mc_members][:, None, :],
+                                        act.shape).reshape(-1),
+                        (vols[:, :, None] * act).reshape(-1))
         else:
+            ov = ov_geo[p_ord[:, None], c_ord[None, :]]   # (P, Q) elems
             vols = ov.astype(float) * bpe
             same = p_nodes[:, None] == c_nodes[None, :]
             vols_off = np.where(same, 0.0, vols)

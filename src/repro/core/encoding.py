@@ -97,9 +97,16 @@ class LMS:
         """Stable hashable identity (the ``ms`` dict itself is unhashable).
 
         Sorted by layer name so two LMS with the same per-layer MS but
-        different dict insertion order share one key."""
-        return tuple(sorted((n, m.part, m.cg, m.fd)
-                            for n, m in self.ms.items()))
+        different dict insertion order share one key.  Memoized: the
+        evaluator keys every (cached) evaluation on it, and an LMS is
+        frozen, so the key can never change after construction."""
+        try:
+            return self._cache_key
+        except AttributeError:
+            key = tuple(sorted((n, m.part, m.cg, m.fd)
+                               for n, m in self.ms.items()))
+            object.__setattr__(self, "_cache_key", key)
+            return key
 
     def validate(self, group: LayerGroup, g: Graph, n_cores: int,
                  n_dram: int) -> None:
@@ -128,6 +135,90 @@ class LMS:
                 raise ValueError(f"{name}: weighted layer needs WGT >= 0")
             if not lyr.has_weight and m.fd[1] >= 0:
                 raise ValueError(f"{name}: weightless layer must have WGT=-1")
+
+
+# ---------------------------------------------------------------------------
+# Packed structure-of-arrays LMS batches (batched evaluation engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LMSBatch:
+    """B mappings of ONE layer group, packed as padded int arrays.
+
+    Structure-of-arrays transport format of the batched evaluation engine:
+    every per-layer field of every mapping lives in one int64 array with a
+    leading batch axis, so a whole batch ships as five ndarrays instead of
+    B dicts of frozen dataclasses.  Layer order is fixed (``names``); CG
+    rows are right-padded with -1 to the batch-wide maximum (mappings of
+    one group may give a layer different core counts — "ragged" batches).
+
+    ``pack_lms_batch`` / ``unpack_lms_batch`` round-trip exactly;
+    unpacking rebuilds real ``MS`` values, so ``MS.__post_init__``
+    re-validates every row (Part product == |CG|, no duplicate cores) —
+    a corrupted batch raises instead of analyzing garbage.
+    """
+    names: Tuple[str, ...]        # layer order of the rows below
+    part: np.ndarray              # (B, L, 4) int64
+    cg: np.ndarray                # (B, L, Cmax) int64, -1 padded
+    cg_len: np.ndarray            # (B, L) int64 — valid prefix of each CG row
+    fd: np.ndarray                # (B, L, 3) int64
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.part.shape[0])
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.names)
+
+
+def pack_lms_batch(lms_list: Sequence[LMS],
+                   names: Optional[Sequence[str]] = None) -> LMSBatch:
+    """Pack B same-group mappings into one :class:`LMSBatch`.
+
+    ``names`` fixes the layer axis order (defaults to the first mapping's
+    insertion order).  Every mapping must cover exactly that layer set.
+    """
+    if not lms_list:
+        raise ValueError("cannot pack an empty LMS batch")
+    if names is None:
+        names = tuple(lms_list[0].ms)
+    else:
+        names = tuple(names)
+    B, L = len(lms_list), len(names)
+    for lms in lms_list:
+        if set(lms.ms) != set(names):
+            raise ValueError(
+                f"LMS layers {sorted(lms.ms)} != batch layers {sorted(names)}")
+    cmax = max(m.nc for lms in lms_list for m in lms.ms.values())
+    part = np.empty((B, L, 4), dtype=np.int64)
+    cg = np.full((B, L, cmax), -1, dtype=np.int64)
+    cg_len = np.empty((B, L), dtype=np.int64)
+    fd = np.empty((B, L, 3), dtype=np.int64)
+    for b, lms in enumerate(lms_list):
+        for l, name in enumerate(names):
+            m = lms.ms[name]
+            part[b, l] = m.part
+            cg[b, l, :m.nc] = m.cg
+            cg_len[b, l] = m.nc
+            fd[b, l] = m.fd
+    return LMSBatch(names=names, part=part, cg=cg, cg_len=cg_len, fd=fd)
+
+
+def unpack_lms_batch(batch: LMSBatch) -> List[LMS]:
+    """Rebuild the B ``LMS`` values of a packed batch (exact inverse of
+    :func:`pack_lms_batch`; ``MS.__post_init__`` re-validates each row)."""
+    out: List[LMS] = []
+    part, cg, cg_len, fd = batch.part, batch.cg, batch.cg_len, batch.fd
+    for b in range(batch.batch_size):
+        ms: Dict[str, MS] = {}
+        for l, name in enumerate(batch.names):
+            n = int(cg_len[b, l])
+            ms[name] = MS(part=tuple(int(v) for v in part[b, l]),
+                          cg=tuple(int(v) for v in cg[b, l, :n]),
+                          fd=tuple(int(v) for v in fd[b, l]))
+        out.append(LMS(ms=ms))
+    return out
 
 
 # ---------------------------------------------------------------------------

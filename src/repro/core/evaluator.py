@@ -31,10 +31,25 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .analyzer import Analyzer, GroupAnalysis, router_grid
+from .analyzer import (T_CORE_IN, T_CORE_MACS, T_CORE_TIME, T_DRAM,
+                       T_DRAM_AM, T_EDGE, T_EDGE_AM, T_GLB, T_GLB_RW,
+                       Analyzer, GroupAnalysis, router_grid)
 from .encoding import LMS
 from .hw import ArchConfig
 from .workload import Graph, LayerGroup
+
+
+def analysis_signature(arch: ArchConfig) -> Tuple:
+    """The ArchConfig fields the traffic/compute ANALYSIS depends on.
+
+    Everything except the three bandwidths (``noc_bw``, ``d2d_bw``,
+    ``dram_bw``), which enter only the delay math of ``eval_group``.
+    Candidates sharing a signature share ``partition_graph``,
+    ``tangram_map`` and every ``GroupAnalysis`` bit-for-bit — the
+    batched T-Map screening path exploits exactly this.
+    """
+    return (arch.x_cores, arch.y_cores, arch.xcut, arch.ycut, arch.glb_kb,
+            arch.macs_per_core, arch.freq_ghz, arch.n_dram, arch.tech)
 
 
 @dataclass
@@ -87,6 +102,11 @@ class Evaluator:
         self._is_d2d = self.grid.edge_is_d2d
         self._not_d2d = ~self._is_d2d
         self._has_d2d = bool(self._is_d2d.any())
+        # integer column indices: fancy-indexing (B, ne) rows is cheaper
+        # than boolean masks and selects the same elements in the same
+        # (ascending-position) order
+        self._noc_idx = np.flatnonzero(self._not_d2d)
+        self._d2d_idx = np.flatnonzero(self._is_d2d)
         self._depth_cache: Dict[Tuple[str, ...], int] = {}
 
     # ------------------------------------------------------------------
@@ -161,6 +181,178 @@ class Evaluator:
         return ge, an
 
     # ------------------------------------------------------------------
+    def eval_requests_batch(self, requests: Sequence[Tuple[LayerGroup, LMS]],
+                            total_batch: int
+                            ) -> List[Tuple[GroupEval, GroupAnalysis]]:
+        """Evaluate a mixed batch of (group, lms) requests in ONE pass.
+
+        Row ``b`` is bit-identical to ``eval_group(*requests[b],
+        total_batch)``: the batched analyzer replays every request's
+        contribution stream in the scalar order (disjoint buffer rows, one
+        ``np.bincount``), and the delay/energy math below mirrors the
+        scalar path operation for operation along a leading batch axis —
+        masked 2-D row reductions see the same elements in the same order
+        as the scalar 1-D reductions, so pairwise summation blocks
+        identically, and the per-row ``n_passes``/``depth`` constants
+        enter elementwise exactly where the scalar ints did.
+        """
+        arch, tech = self.arch, self.arch.tech
+        ab = self.analyzer.analyze_requests(requests, total_batch)
+        n_passes = np.array([max(1, -(-total_batch // grp.batch_unit))
+                             for grp, _ in requests], dtype=np.int64)
+        depth = np.array([self._group_depth(grp) for grp, _ in requests],
+                         dtype=np.int64)
+
+        core_time = ab.target(T_CORE_TIME)                   # (B, nc)
+        glb_rw = ab.target(T_GLB_RW)                         # (B, 2)
+        edge_tot = ab.target(T_EDGE) + ab.target(T_EDGE_AM)  # (B, ne)
+        edge_noc = edge_tot[:, self._noc_idx]
+        edge_d2d = edge_tot[:, self._d2d_idx]
+        t_noc = (edge_noc / (arch.noc_bw * 1e9)).max(axis=1, initial=0.0)
+        if self._has_d2d:
+            t_d2d = (edge_d2d / (arch.d2d_bw * 1e9)).max(axis=1, initial=0.0)
+        else:
+            t_d2d = np.zeros(len(t_noc))
+        dram_port_bw = arch.dram_bw / arch.n_dram * 1e9
+        dram_tot = ab.target(T_DRAM) + ab.target(T_DRAM_AM)
+        t_dram = (dram_tot / dram_port_bw).max(axis=1, initial=0.0)
+        t_comp = core_time.max(axis=1, initial=0.0)
+        times = np.stack([t_comp, t_noc, t_d2d, t_dram])     # (4, B)
+        stage = np.maximum(times.max(axis=0), 1e-12)
+        # np.argmax picks the FIRST of tied maxima — same tie-break as the
+        # scalar path's strict-greater update loop
+        b_idx = np.argmax(times, axis=0)
+
+        over = np.maximum(ab.target(T_GLB) - arch.core_glb_bytes, 0.0)
+        overflow = over.sum(axis=1)
+        spill_dram = overflow * 2.0
+        stage = stage * (1.0 + overflow / (arch.core_glb_bytes * arch.n_cores))
+        stage = stage + spill_dram / (arch.dram_bw * 1e9)
+        delay = stage * (n_passes + depth - 1)
+
+        noc_bytes = edge_noc.sum(axis=1) * n_passes
+        d2d_bytes = edge_d2d.sum(axis=1) * n_passes
+        dram_b = ab.target(T_DRAM).sum(axis=1) * n_passes \
+            + ab.weight_totals + spill_dram * n_passes
+        macs_total = ab.target(T_CORE_MACS).sum(axis=1) * n_passes
+        e_mac = macs_total * tech.e_mac
+        e_glb = (glb_rw[:, 0] + glb_rw[:, 1]
+                 + ab.target(T_CORE_IN).sum(axis=1)) * n_passes \
+            * tech.e_glb_byte
+        e_noc = (noc_bytes + d2d_bytes) * tech.e_noc_hop_byte
+        e_d2d = d2d_bytes * tech.e_d2d_byte
+        e_dram = dram_b * tech.e_dram_byte
+        # same association order as the scalar path's sum(e.values())
+        energy = ((((e_mac + e_glb) + e_noc) + e_d2d) + e_dram)
+
+        names = ("compute", "noc", "d2d", "dram")
+        out: List[Tuple[GroupEval, GroupAnalysis]] = []
+        for b, an in enumerate(ab.analyses):
+            ge = GroupEval(
+                delay_s=float(delay[b]), energy_j=float(energy[b]),
+                stage_time_s=float(stage[b]), n_passes=int(n_passes[b]),
+                depth=int(depth[b]),
+                bottleneck=names[int(b_idx[b])],
+                glb_overflow_bytes=float(overflow[b]),
+                energy_breakdown={
+                    "mac": float(e_mac[b]), "glb": float(e_glb[b]),
+                    "noc": float(e_noc[b]), "d2d": float(e_d2d[b]),
+                    "dram": float(e_dram[b])})
+            out.append((ge, an))
+        return out
+
+    def eval_group_batch(self, group: LayerGroup, lms_list: Sequence[LMS],
+                         total_batch: int
+                         ) -> List[Tuple[GroupEval, GroupAnalysis]]:
+        """Evaluate B mappings of ONE group in a single vectorized pass
+        (:meth:`eval_requests_batch` with a constant group); row ``b`` is
+        bit-identical to ``eval_group(group, lms_list[b], total_batch)``."""
+        return self.eval_requests_batch([(group, lms) for lms in lms_list],
+                                        total_batch)
+
+    # ------------------------------------------------------------------
+    def eval_groups_batched(self, requests: Sequence[Tuple[LayerGroup, LMS]],
+                            total_batch: int
+                            ) -> List[Tuple[GroupEval, GroupAnalysis]]:
+        """Evaluate a mixed batch of (group, lms) requests.
+
+        Requests are deduplicated and run through ONE
+        :meth:`eval_requests_batch` pass (layer groups may mix — the
+        accumulator layout is per-arch).  Results are returned in request
+        order and are bit-identical to per-request :meth:`eval_group`
+        calls.
+        """
+        keyed = [(grp.names, grp.batch_unit, lms.cache_key())
+                 for grp, lms in requests]
+        distinct: "OrderedDict[Tuple, Tuple[LayerGroup, LMS]]" = OrderedDict()
+        for req, key in zip(requests, keyed):
+            if key not in distinct:
+                distinct[key] = req
+        results = dict(zip(distinct,
+                           self.eval_requests_batch(list(distinct.values()),
+                                                    total_batch)))
+        return [results[key] for key in keyed]
+
+    # ------------------------------------------------------------------
+    def eval_mapping_archs(self, mapping: Sequence[Tuple[LayerGroup, LMS]],
+                           total_batch: int, archs: Sequence[ArchConfig]
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """(energy (C,), delay (C,)) of ONE mapping under C archs that share
+        this evaluator's :func:`analysis_signature` (i.e. differ only in the
+        noc/d2d/dram bandwidths).
+
+        The analysis — and therefore the energy — is computed once; only
+        the per-candidate delay terms are re-derived, vectorized over the
+        bandwidth columns.  Each column is bit-identical to evaluating the
+        mapping under that arch with its own scalar evaluator: traffic
+        maxima are reduced BEFORE the bandwidth division, which is exact
+        because the numerators are non-negative byte counts and float
+        division by a positive constant is monotone non-decreasing, so
+        ``max_i fl(a_i / c) == fl(max_i a_i / c)`` bit-for-bit.
+        """
+        sig = analysis_signature(self.arch)
+        for arch in archs:
+            if analysis_signature(arch) != sig:
+                raise ValueError(
+                    f"arch {arch.label()} does not share the analysis "
+                    f"signature of {self.arch.label()}; only bandwidth "
+                    "fields may differ")
+        C = len(archs)
+        noc_div = np.array([a.noc_bw * 1e9 for a in archs])
+        d2d_div = np.array([a.d2d_bw * 1e9 for a in archs])
+        dram_port_div = np.array([a.dram_bw / a.n_dram * 1e9 for a in archs])
+        dram_div = np.array([a.dram_bw * 1e9 for a in archs])
+        glb_pen_div = self.arch.core_glb_bytes * self.arch.n_cores
+        E = np.zeros(C)
+        D = np.zeros(C)
+        for group, lms in mapping:
+            ge, an = self.eval_group(group, lms, total_batch)
+            n_passes = ge.n_passes
+            depth = ge.depth
+            edge_tot = an.edge_bytes + an.edge_bytes_amortized
+            m_noc = float(edge_tot[self._not_d2d].max(initial=0.0))
+            t_noc = m_noc / noc_div
+            if self._has_d2d:
+                t_d2d = float(edge_tot[self._is_d2d].max(initial=0.0)) \
+                    / d2d_div
+            else:
+                t_d2d = np.zeros(C)
+            m_dram = float((an.dram_bytes
+                            + an.dram_bytes_amortized).max(initial=0.0))
+            t_dram = m_dram / dram_port_div
+            t_comp = float(an.core_time_s.max(initial=0.0))
+            stage = np.maximum(
+                np.maximum(np.maximum(np.maximum(t_comp, t_noc), t_d2d),
+                           t_dram), 1e-12)
+            overflow = ge.glb_overflow_bytes
+            spill_dram = overflow * 2.0
+            stage = stage * (1.0 + overflow / glb_pen_div)
+            stage = stage + spill_dram / dram_div
+            D = D + stage * (n_passes + depth - 1)
+            E = E + ge.energy_j        # energy never reads a bandwidth
+        return E, D
+
+    # ------------------------------------------------------------------
     def traffic_summary(self, group: LayerGroup, lms: LMS,
                         total_batch: int) -> Dict[str, float]:
         """Per-pass traffic totals of one group, split by physical axis.
@@ -232,6 +424,46 @@ class CachedEvaluator(Evaluator):
         self._cache[key] = out
         if len(self._cache) > self.maxsize:
             self._cache.popitem(last=False)
+        return out
+
+    def eval_groups_batched(self, requests: Sequence[Tuple[LayerGroup, LMS]],
+                            total_batch: int
+                            ) -> List[Tuple[GroupEval, GroupAnalysis]]:
+        """Cache-aware batch: hits resolve from the content cache, misses
+        run through the vectorized batch path and are inserted exactly as
+        :meth:`eval_group` would insert them (bit-identical values), so
+        interleaving batched and scalar calls can never diverge."""
+        keys = [(grp.names, grp.batch_unit, lms.cache_key(), total_batch)
+                for grp, lms in requests]
+        out: List[Optional[Tuple[GroupEval, GroupAnalysis]]] \
+            = [None] * len(requests)
+        fresh: Dict[Tuple, Tuple[GroupEval, GroupAnalysis]] = {}
+        miss_reqs: List[Tuple[LayerGroup, LMS]] = []
+        miss_keys: List[Tuple] = []
+        for i, key in enumerate(keys):
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.hits += 1
+                out[i] = hit
+            elif key not in fresh:
+                fresh[key] = None          # claimed; filled below
+                miss_reqs.append(requests[i])
+                miss_keys.append(key)
+            else:
+                self.hits += 1             # duplicate of an in-batch miss
+        if miss_reqs:
+            self.misses += len(miss_reqs)
+            for key, res in zip(miss_keys,
+                                self.eval_requests_batch(miss_reqs,
+                                                         total_batch)):
+                fresh[key] = res
+                self._cache[key] = res
+                if len(self._cache) > self.maxsize:
+                    self._cache.popitem(last=False)
+        for i, key in enumerate(keys):
+            if out[i] is None:
+                out[i] = fresh[key]
         return out
 
     def cache_info(self) -> Dict[str, int]:

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import json
 import math
+from collections import OrderedDict
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -53,9 +54,13 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
 import numpy as np
 
 from .encoding import LMS, MS
-from .evaluator import CachedEvaluator, Evaluator
+from .evaluator import (CachedEvaluator, Evaluator, analysis_signature,
+                        evaluator_for)
+from .graph_partition import partition_graph
 from .hw import TECH_12NM, ArchConfig
-from .sa import Mapping, SAChain, SAConfig, SAResult, group_draw_cdf
+from .sa import (Mapping, SAChain, SAConfig, SAResult, group_draw_cdf,
+                 step_chains_lockstep)
+from .tangram import tangram_map
 from .workload import Graph, LayerGroup
 
 # resolved lazily through the module so tests can monkeypatch
@@ -138,6 +143,15 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
     ``cfg.seed + k``; the best mapping over all chains is re-evaluated
     exactly.
 
+    With ``cfg.lockstep`` (the default) the chains advance through
+    :func:`repro.core.sa.step_chains_lockstep`: each iteration draws every
+    chain's proposal, batch-evaluates them in one vectorized analyzer
+    replay per touched layer group, then runs the acceptances in chain
+    order.  Per-chain RNG streams are consumed in the serial order and the
+    batched evaluator is bit-identical to the scalar one, so trajectories
+    — including the reference chain's, and therefore the single-chain
+    guarantee — are unchanged; only the per-iteration overhead drops.
+
     Note ``n_chains=2`` has a one-chain ladder and therefore no swaps —
     it degenerates to two independent seeds plus elitism (the pre-refactor
     restart behavior).  Tempering proper needs ``n_chains >= 3``;
@@ -158,8 +172,11 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
     swap_attempts = [0] * n_pairs
     swap_accepts = [0] * n_pairs
     for it in range(cfg.iters):
-        for chain in chains:
-            chain.step()
+        if cfg.lockstep:
+            step_chains_lockstep(chains)
+        else:
+            for chain in chains:
+                chain.step()
         if (it + 1) % swap_every == 0:
             for k in range(n_pairs):
                 cold, hot = ladder[k], ladder[k + 1]
@@ -627,6 +644,58 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
 # Pareto frontier over (MC, E, D)
 # ---------------------------------------------------------------------------
 
+def _pareto_mask_quadratic(vals: List[Tuple]) -> List[bool]:
+    """Reference O(n^2) all-pairs dominance check (kept for arbitrary key
+    counts and as the property-test oracle for the sweep below)."""
+    out = []
+    for i, vi in enumerate(vals):
+        out.append(not any(
+            all(a <= b for a, b in zip(vj, vi)) and vj != vi
+            for j, vj in enumerate(vals) if j != i))
+    return out
+
+
+def _pareto_mask_sweep(vals: List[Tuple]) -> List[bool]:
+    """Sort-based sweep for 2-3 keys: O(n log n) instead of all-pairs.
+
+    Points are processed in lexicographic order (any dominator of ``v``
+    is lex-<= ``v``; lex-equal vectors never dominate each other, so
+    groups of identical vectors are decided together).  A staircase of
+    non-dominated ``(y, z)`` pairs — ``y`` strictly ascending, ``z``
+    strictly descending — answers "does any earlier point have y' <= y
+    and z' <= z" with one bisect; 2-key inputs use a constant third
+    coordinate.  Exactly equivalent to the all-pairs rule, including tie
+    handling (identical vectors are all kept).
+    """
+    from bisect import bisect_left, bisect_right
+    order = sorted(range(len(vals)), key=lambda i: vals[i])
+    keep = [False] * len(vals)
+    ys: List = []
+    zs: List = []
+    i = 0
+    while i < len(order):
+        j = i
+        v = vals[order[i]]
+        while j < len(order) and vals[order[j]] == v:
+            j += 1
+        y, z = (v[1], v[2]) if len(v) == 3 else (v[1], 0)
+        pos = bisect_right(ys, y) - 1
+        if not (pos >= 0 and zs[pos] <= z):      # not dominated
+            for t in range(i, j):
+                keep[order[t]] = True
+            # insert (y, z); drop staircase entries the new pair dominates
+            # (y'' >= y with z'' >= z form a prefix of the tail, since z
+            # is descending)
+            ip = bisect_left(ys, y)
+            q = ip
+            while q < len(ys) and zs[q] >= z:
+                q += 1
+            ys[ip:q] = [y]
+            zs[ip:q] = [z]
+        i = j
+    return keep
+
+
 def pareto_frontier(points: Sequence["_dse.DSEPoint"],
                     keys: Tuple[str, ...] = ("mc", "energy_j", "delay_s"),
                     ) -> List["_dse.DSEPoint"]:
@@ -634,17 +703,16 @@ def pareto_frontier(points: Sequence["_dse.DSEPoint"],
 
     A point is dominated if some other point is <= on every key and < on at
     least one.  Ties (identical key vectors) are all kept.  Returned sorted
-    by scalar objective, best first.
+    by scalar objective, best first.  The default 2-3 key case runs a sort
+    + staircase sweep (O(n log n)); other key counts fall back to the
+    all-pairs scan.
     """
     vals = [tuple(getattr(p, k) for k in keys) for p in points]
-    out: List["_dse.DSEPoint"] = []
-    for i, p in enumerate(points):
-        vi = vals[i]
-        dominated = any(
-            all(a <= b for a, b in zip(vj, vi)) and vj != vi
-            for j, vj in enumerate(vals) if j != i)
-        if not dominated:
-            out.append(p)
+    if vals and len(vals[0]) in (2, 3):
+        mask = _pareto_mask_sweep(vals)
+    else:
+        mask = _pareto_mask_quadratic(vals)
+    out = [p for p, m in zip(points, mask) if m]
     out.sort(key=lambda p: p.objective)
     return out
 
@@ -700,7 +768,8 @@ class ExplorationEngine:
 
     def __init__(self, workloads: Dict[str, Graph], cfg: "_dse.DSEConfig",
                  n_workers: int = 1, checkpoint: Union[str, Path, None] = None,
-                 progress: bool = False, mp_context: str = "spawn"):
+                 progress: bool = False, mp_context: str = "spawn",
+                 batched_screen: bool = True):
         self.workloads = dict(workloads)
         self._wl_names = sorted(self.workloads)
         self.cfg = cfg
@@ -708,6 +777,9 @@ class ExplorationEngine:
         self.checkpoint = checkpoint
         self.progress = progress
         self.mp_context = mp_context
+        # batched T-Map screening (bit-identical to the per-candidate
+        # loop); False keeps the per-task path for A/B tests + benchmarks
+        self.batched_screen = batched_screen
         self._pool: Optional[ProcessPoolExecutor] = None
         # screening scores of the last run() that screened (sorted best
         # first); lets callers report the screen stage without re-running it
@@ -884,6 +956,57 @@ class ExplorationEngine:
                 raise
         return results
 
+    # -- batched T-Map screening ---------------------------------------
+    def _screen_tasks(self, indexed: Sequence[Tuple[int, ArchConfig]]
+                      ) -> Dict[Tuple[int, int], "_dse.TaskResult"]:
+        """T-Map-score every candidate in one batched pass per
+        bandwidth-sibling signature group.
+
+        The traffic/compute analysis of a T-Map mapping depends on every
+        ArchConfig field EXCEPT the three bandwidths
+        (:func:`repro.core.evaluator.analysis_signature`), and Table-I
+        grids enumerate bandwidths densely — so candidates sharing a
+        signature share ``partition_graph``, ``tangram_map`` and every
+        ``GroupAnalysis`` bit-for-bit.  This path computes each signature's
+        analysis once and re-derives only the per-candidate delay terms,
+        vectorized over the signature's bandwidth columns
+        (:meth:`repro.core.evaluator.Evaluator.eval_mapping_archs`);
+        energies never read a bandwidth and are shared outright.  Results
+        are bit-identical to the per-candidate ``evaluate_task`` loop
+        (A/B-tested; ``batched_screen=False`` keeps that loop for the
+        benchmark's reference leg).
+        """
+        if not self.batched_screen:
+            return self._map_tasks(self._tasks(indexed), use_sa=False,
+                                   checkpoint=None, stage="screen")
+        keep = self.cfg.keep_mappings
+        results: Dict[Tuple[int, int], "_dse.TaskResult"] = {}
+        # the signature reads only the arch, so one grouping serves every
+        # workload
+        by_sig: "OrderedDict[Tuple, List[Tuple[int, ArchConfig]]]" \
+            = OrderedDict()
+        for ci, arch in indexed:
+            by_sig.setdefault(analysis_signature(arch), []).append((ci, arch))
+        n_sigs = len(by_sig)
+        for wi, name in enumerate(self._wl_names):
+            g = self.workloads[name]
+            for members in by_sig.values():
+                rep = members[0][1]
+                groups = partition_graph(g, rep, self.cfg.batch)
+                mapping = tangram_map(groups, g, rep)
+                ev = evaluator_for(rep, g)
+                E, D = ev.eval_mapping_archs(mapping, self.cfg.batch,
+                                             [a for _, a in members])
+                for (ci, arch), e_c, d_c in zip(members, E, D):
+                    results[(ci, wi)] = _dse.TaskResult(
+                        energy_j=float(e_c), delay_s=float(d_c),
+                        mapping=mapping if keep else None)
+        if self.progress:
+            print(f"[screen] batched: {len(indexed)} candidates x "
+                  f"{len(self._wl_names)} workloads in {n_sigs} "
+                  "signature group(s)", flush=True)
+        return results
+
     # -- public API ----------------------------------------------------
     def map_archs(self, archs: Sequence[ArchConfig], use_sa: bool = True,
                   ) -> List["_dse.DSEPoint"]:
@@ -899,8 +1022,7 @@ class ExplorationEngine:
                ) -> List["_dse.DSEPoint"]:
         """T-Map-only scoring pass (no SA), sorted best-objective first."""
         indexed = list(enumerate(candidates))
-        results = self._map_tasks(self._tasks(indexed), use_sa=False,
-                                  checkpoint=None, stage="screen")
+        results = self._screen_tasks(indexed)
         return sorted(self._reduce(indexed, results),
                       key=lambda p: p.objective)
 
@@ -954,9 +1076,7 @@ class ExplorationEngine:
                 f"screen_keep must be a fraction or 'auto', "
                 f"got {screen_keep!r}")
         if use_sa and screen_keep < 1.0 and len(candidates) > 1:
-            screen_results = self._map_tasks(
-                self._tasks(indexed), use_sa=False, checkpoint=None,
-                stage="screen")
+            screen_results = self._screen_tasks(indexed)
             screen_pts = self._reduce(indexed, screen_results)
             order = sorted(range(len(indexed)),
                            key=lambda i: screen_pts[i].objective)
@@ -998,8 +1118,7 @@ class ExplorationEngine:
         exhaustive.  Fully deterministic (screened order + per-task
         seeds), so resume replays identically.
         """
-        screen_results = self._map_tasks(self._tasks(indexed), use_sa=False,
-                                         checkpoint=None, stage="screen")
+        screen_results = self._screen_tasks(indexed)
         screen_pts = self._reduce(indexed, screen_results)
         order = sorted(range(len(indexed)),
                        key=lambda i: screen_pts[i].objective)

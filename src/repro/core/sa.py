@@ -23,6 +23,7 @@ from __future__ import annotations
 import math
 import warnings
 from dataclasses import dataclass, field, replace
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -53,6 +54,13 @@ class SAConfig:
     # conservative (3.0, 50) at equal-or-better geomean cost.
     swap_every: int = 25          # iterations between adjacent-chain swaps
     t_ladder: float = 2.0         # temperature ratio between adjacent chains
+    # n_chains > 1 only: step all chains in lockstep, evaluating the
+    # iteration's proposals through one vectorized batch per touched layer
+    # group.  Trajectories are bit-identical either way (per-chain RNG
+    # streams are consumed in the same order and the batched evaluator is
+    # bit-identical to the scalar one) — False keeps the serial per-chain
+    # loop for A/B tests and benchmarks.
+    lockstep: bool = True
 
 
 @dataclass
@@ -75,10 +83,9 @@ class SAResult:
                 if t > 0]
 
 
-def _group_weights(groups: Sequence[LayerGroup], n_cores: int) -> np.ndarray:
+def _group_weights(group_sizes: Sequence[int], n_cores: int) -> np.ndarray:
     logs = []
-    for grp in groups:
-        n = len(grp.names)
+    for n in group_sizes:
         try:
             # log of the paper's lower bound, via lgamma to stay in float
             from math import comb, lgamma
@@ -219,15 +226,29 @@ class _Op:
         return LMS(ms=new)
 
 
+@lru_cache(maxsize=4096)
+def _group_cdf_cached(group_sizes: Tuple[int, ...], n_cores: int) -> np.ndarray:
+    """One CDF per (group-size vector, core count), computed once per
+    process.  ``_group_weights`` reads nothing but each group's layer
+    count, so every chain, every candidate of a sweep and every re-anneal
+    over the same (graph partition, arch) shares this array instead of
+    re-deriving the log-space weights per ``sa_optimize`` call.  The array
+    is shared read-only (chains only ``searchsorted`` it)."""
+    cum_w = np.cumsum(_group_weights(group_sizes, n_cores))
+    cum_w[-1] = 1.0
+    cum_w.setflags(write=False)
+    return cum_w
+
+
 def group_draw_cdf(groups: Sequence[LayerGroup], n_cores: int) -> np.ndarray:
     """Cumulative group-pick distribution shared by all chains of one run.
 
     Inverse-CDF group draw: ``rng.choice(..., p=weights)`` re-normalizes and
     allocates on every call, so chains draw via ``np.searchsorted`` instead.
+    Cached per (group sizes, n_cores) — the only inputs the weights read.
     """
-    cum_w = np.cumsum(_group_weights(groups, n_cores))
-    cum_w[-1] = 1.0
-    return cum_w
+    return _group_cdf_cached(tuple(len(grp.names) for grp in groups),
+                             n_cores)
 
 
 class SAChain:
@@ -273,9 +294,14 @@ class SAChain:
         self.accepted = 0
         self.proposed = 0
 
-    def step(self) -> None:
-        """One proposal + cooling step (Metropolis acceptance)."""
-        cfg, rng, ops = self.cfg, self.rng, self.ops
+    def propose(self) -> Optional[Tuple[int, LayerGroup, LMS,
+                                        Optional[List[int]]]]:
+        """Draw one proposal and apply cooling — the head of the original
+        monolithic ``step()``, consuming RNG draws in exactly its order
+        (group pick, operator pick, operator-internal draws).  Returns
+        ``None`` when the drawn operator is inapplicable, else
+        ``(gi, grp, cand, new_idle)`` for :meth:`accept`."""
+        rng, ops = self.rng, self.ops
         gi = int(np.searchsorted(self.cum_w, rng.random(), side="right"))
         grp, lms = self.mapping[gi]
         op = int(rng.integers(1, 6))
@@ -293,9 +319,16 @@ class SAChain:
             cand = ops.op5(grp, lms)
         self.T *= self.alpha
         if cand is None:
-            return
+            return None
         self.proposed += 1
-        ge, _ = self.ev.eval_group(grp, cand, self.total_batch)
+        return gi, grp, cand, new_idle
+
+    def accept(self, gi: int, grp: LayerGroup, cand: LMS,
+               new_idle: Optional[List[int]], ge: GroupEval) -> None:
+        """Metropolis acceptance of an evaluated proposal — the tail of the
+        original ``step()`` (the acceptance draw is this chain's next RNG
+        use after the proposal draws, evaluation consumes none)."""
+        cfg, rng = self.cfg, self.rng
         old = self.evals[gi]
         newE = self.E - old.energy_j + ge.energy_j
         newD = self.D - old.delay_s + ge.delay_s
@@ -309,6 +342,15 @@ class SAChain:
             self.cost, self.E, self.D = new_cost, newE, newD
             self.accepted += 1
             self._track_best()
+
+    def step(self) -> None:
+        """One proposal + cooling step (Metropolis acceptance)."""
+        prop = self.propose()
+        if prop is None:
+            return
+        gi, grp, cand, new_idle = prop
+        ge, _ = self.ev.eval_group(grp, cand, self.total_batch)
+        self.accept(gi, grp, cand, new_idle, ge)
 
     def _track_best(self) -> None:
         if self.cost < self.best_cost:
@@ -338,6 +380,30 @@ class SAChain:
                         energy_j=final.energy_j, delay_s=final.delay_s,
                         history=history, accepted=self.accepted,
                         proposed=self.proposed)
+
+
+def step_chains_lockstep(chains: Sequence[SAChain]) -> None:
+    """Advance every chain one iteration with ONE batched evaluation.
+
+    Phase 1 draws each chain's proposal with its own RNG (same per-chain
+    draw order as serial ``step()``).  Phase 2 evaluates all drawn
+    candidates through the shared evaluator's batch path — deduplicated
+    and grouped by the touched layer group, one vectorized analyzer replay
+    per group.  Phase 3 runs the Metropolis acceptances in chain order,
+    each consuming only its own chain's RNG.  Because evaluation consumes
+    no randomness and the batched evaluator is bit-identical to the scalar
+    one, every chain's trajectory equals the serial per-chain loop's.
+    """
+    props = [ch.propose() for ch in chains]
+    live = [(i, p) for i, p in enumerate(props) if p is not None]
+    if not live:
+        return
+    ev = chains[0].ev
+    total_batch = chains[0].total_batch
+    results = ev.eval_groups_batched(
+        [(p[1], p[2]) for _, p in live], total_batch)
+    for (i, (gi, grp, cand, new_idle)), (ge, _) in zip(live, results):
+        chains[i].accept(gi, grp, cand, new_idle, ge)
 
 
 def sa_optimize(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],

@@ -1,0 +1,297 @@
+"""Batched mapping-evaluation engine: SoA LMS batches, batch-axis
+bit-identity vs the scalar engine, lockstep replica exchange, batched
+screening, the sort-based Pareto sweep and the cached group-draw CDF."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.dse import DSEConfig, grid_candidates
+from repro.core.encoding import (LMS, MS, pack_lms_batch, random_lms,
+                                 unpack_lms_batch)
+from repro.core.evaluator import (CachedEvaluator, Evaluator,
+                                  analysis_signature)
+from repro.core.explore import (ExplorationEngine, _pareto_mask_quadratic,
+                                _pareto_mask_sweep, replica_exchange_sa)
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import ArchConfig
+from repro.core.sa import SAConfig, _Op, group_draw_cdf, sa_optimize
+from repro.core.tangram import tangram_map
+from repro.core.workloads import transformer
+
+SET = settings(max_examples=20, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+def _arch():
+    return ArchConfig(x_cores=4, y_cores=3, xcut=2, ycut=1,
+                      noc_bw=16.0, d2d_bw=8.0, dram_bw=64.0,
+                      glb_kb=512, macs_per_core=256)
+
+
+def _graph():
+    return transformer(n_layers=1, d_model=64, d_ff=128, seq=32,
+                       name="tf-batched")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch, g = _arch(), _graph()
+    groups = partition_graph(g, arch, 8)
+    init = tangram_map(groups, g, arch)
+    return arch, g, groups, init
+
+
+def _random_batch(arch, g, grp, seed, n):
+    """n random mappings of one group (ragged CG lengths included)."""
+    rng = np.random.default_rng(seed)
+    return [random_lms(grp, g, arch.n_cores, arch.n_dram, rng)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# SoA pack / unpack
+# ---------------------------------------------------------------------------
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6))
+def test_pack_unpack_roundtrip(seed, n):
+    arch, g = _arch(), _graph()
+    grp = partition_graph(g, arch, 8)[0]
+    batch = _random_batch(arch, g, grp, seed, n)
+    packed = pack_lms_batch(batch, names=grp.names)
+    assert packed.batch_size == n
+    assert packed.names == grp.names
+    assert packed.cg.shape[2] == max(m.nc for lms in batch
+                                     for m in lms.ms.values())
+    out = unpack_lms_batch(packed)
+    assert [lms.cache_key() for lms in out] \
+        == [lms.cache_key() for lms in batch]
+
+
+def test_pack_rejects_bad_batches(setup):
+    arch, g, groups, init = setup
+    grp, lms = init[0]
+    with pytest.raises(ValueError, match="empty"):
+        pack_lms_batch([])
+    other = {n: m for n, m in lms.ms.items()}
+    name = next(iter(other))
+    bad = dict(other)
+    bad["not-a-layer"] = bad.pop(name)
+    with pytest.raises(ValueError, match="layers"):
+        pack_lms_batch([lms, LMS(ms=bad)], names=grp.names)
+
+
+def test_unpack_revalidates_corrupt_rows(setup):
+    arch, g, groups, init = setup
+    grp, lms = init[0]
+    packed = pack_lms_batch([lms], names=grp.names)
+    packed.part[0, 0, 0] += 1          # Part product != |CG| now
+    with pytest.raises(ValueError):
+        unpack_lms_batch(packed)
+
+
+# ---------------------------------------------------------------------------
+# Batch-axis bit-identity vs the scalar engine
+# ---------------------------------------------------------------------------
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5))
+def test_batched_eval_bit_identical_to_scalar(seed, n):
+    """pack -> batched analyze/eval -> row b == scalar eval_group, exactly
+    (the acceptance contract of the batched engine)."""
+    arch, g = _arch(), _graph()
+    groups = partition_graph(g, arch, 8)
+    ev_scalar = Evaluator(arch, g)
+    ev_batch = Evaluator(arch, g)
+    for grp in groups:
+        batch = _random_batch(arch, g, grp, seed, n)
+        packed = pack_lms_batch(batch, names=grp.names)
+        rows = ev_batch.eval_group_batch(grp, unpack_lms_batch(packed), 8)
+        for lms, (geb, anb) in zip(batch, rows):
+            ges, ans = ev_scalar.eval_group(grp, lms, 8)
+            assert ges.delay_s == geb.delay_s
+            assert ges.energy_j == geb.energy_j
+            assert ges.stage_time_s == geb.stage_time_s
+            assert ges.bottleneck == geb.bottleneck
+            assert ges.glb_overflow_bytes == geb.glb_overflow_bytes
+            assert ges.energy_breakdown == geb.energy_breakdown
+            for f in ("core_macs", "edge_bytes", "edge_bytes_amortized",
+                      "dram_bytes", "dram_bytes_amortized", "core_glb_need",
+                      "core_in_bytes", "core_out_bytes", "core_time_s",
+                      "glb_rw_bytes"):
+                assert np.array_equal(getattr(ans, f), getattr(anb, f)), f
+            assert ans.weight_dram_bytes_total == anb.weight_dram_bytes_total
+
+
+def test_mixed_group_requests_bit_identical(setup):
+    """eval_requests_batch may mix layer groups in one replay."""
+    arch, g, groups, init = setup
+    rng = np.random.default_rng(7)
+    ops = _Op(g, arch, rng)
+    reqs = []
+    for grp, lms in init:
+        cur = lms
+        for _ in range(4):
+            cand = (ops.op1(grp, cur) or ops.op2(grp, cur)
+                    or ops.op5(grp, cur) or cur)
+            reqs.append((grp, cand))
+            cur = cand
+    rows = Evaluator(arch, g).eval_requests_batch(reqs, 8)
+    ev = Evaluator(arch, g)
+    for (grp, lms), (geb, _) in zip(reqs, rows):
+        ges, _ = ev.eval_group(grp, lms, 8)
+        assert (ges.delay_s, ges.energy_j) == (geb.delay_s, geb.energy_j)
+
+
+def test_cached_batched_path_matches_and_caches(setup):
+    arch, g, groups, init = setup
+    grp, lms = init[0]
+    batch = _random_batch(arch, g, grp, 3, 4) + [lms, lms]   # duplicates
+    reqs = [(grp, l) for l in batch]
+    ev = CachedEvaluator(arch, g)
+    first = ev.eval_groups_batched(reqs, 8)
+    assert ev.cache_info()["misses"] == 5          # dedup within the batch
+    again = ev.eval_groups_batched(reqs, 8)
+    assert ev.cache_info()["misses"] == 5          # pure hits now
+    for (ga, _), (gb, _) in zip(first, again):
+        assert ga is gb                            # same cached tuples
+    scalar = CachedEvaluator(arch, g)
+    for (grp_, l), (ge, _) in zip(reqs, first):
+        gs, _ = scalar.eval_group(grp_, l, 8)
+        assert (gs.delay_s, gs.energy_j) == (ge.delay_s, ge.energy_j)
+
+
+def test_jax_backend_parity(setup):
+    """Opt-in jax segment-sum replay: parity-grade, never bit-identical."""
+    arch, g, groups, init = setup
+    grp, lms = init[0]
+    batch = _random_batch(arch, g, grp, 5, 3)
+    an = Evaluator(arch, g).analyzer
+    ab_np = an.analyze_batch(grp, batch, 8, backend="numpy")
+    ab_jx = an.analyze_batch(grp, batch, 8, backend="jax")
+    np.testing.assert_allclose(ab_jx.buf, ab_np.buf, rtol=2e-4, atol=1e-2)
+    with pytest.raises(ValueError, match="backend"):
+        an.analyze_batch(grp, batch, 8, backend="torch")
+
+
+# ---------------------------------------------------------------------------
+# Lockstep replica exchange
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n_chains", [(0, 3), (11, 4)])
+def test_lockstep_trajectory_equals_serial_loop(seed, n_chains):
+    arch, g = _arch(), _graph()
+    groups = partition_graph(g, arch, 8)
+    cfg = SAConfig(iters=200, seed=seed, n_chains=n_chains, lockstep=True)
+    from dataclasses import replace
+    rl = replica_exchange_sa(g, arch, groups, 8, cfg)
+    rs = replica_exchange_sa(g, arch, groups, 8,
+                             replace(cfg, lockstep=False))
+    assert rl.cost == rs.cost
+    assert rl.energy_j == rs.energy_j and rl.delay_s == rs.delay_s
+    assert rl.proposed == rs.proposed and rl.accepted == rs.accepted
+    assert rl.swap_attempts == rs.swap_attempts
+    assert rl.swap_accepts == rs.swap_accepts
+    assert [(grp.names, lms.cache_key()) for grp, lms in rl.mapping] \
+        == [(grp.names, lms.cache_key()) for grp, lms in rs.mapping]
+
+
+def test_lockstep_reference_chain_keeps_single_chain_guarantee():
+    """Chain 0 is unswapped, so lockstep n_chains>1 can never be worse than
+    the (unchanged) serial single-chain result on the same seed."""
+    arch, g = _arch(), _graph()
+    groups = partition_graph(g, arch, 8)
+    single = sa_optimize(g, arch, groups, 8, SAConfig(iters=250, seed=2))
+    multi = sa_optimize(g, arch, groups, 8,
+                        SAConfig(iters=250, seed=2, n_chains=4))
+    assert multi.cost <= single.cost
+
+
+# ---------------------------------------------------------------------------
+# Batched screening
+# ---------------------------------------------------------------------------
+
+def _quick_cands(n=8):
+    return grid_candidates(
+        72.0, mac_options=(512, 1024), cut_options=(1, 2),
+        dram_per_tops=(2.0,), noc_options=(16, 32), d2d_ratio=(0.5,),
+        glb_options=(1024, 2048))[:n]
+
+
+def test_batched_screen_bit_identical_to_reference():
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+    cfg = DSEConfig(batch=8, sa=SAConfig(iters=40, seed=0))
+    cands = _quick_cands()
+    with ExplorationEngine({"TF": g}, cfg, batched_screen=True) as eng:
+        batched = eng.screen(cands)
+    with ExplorationEngine({"TF": g}, cfg, batched_screen=False) as eng:
+        ref = eng.screen(cands)
+    assert [(p.arch, p.objective, p.energy_j, p.delay_s) for p in batched] \
+        == [(p.arch, p.objective, p.energy_j, p.delay_s) for p in ref]
+
+
+def test_screened_run_unchanged_by_batched_screen():
+    """run() with screening prunes the same candidates and produces the
+    same refined points whichever screening implementation runs."""
+    g = transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+    cfg = DSEConfig(batch=8, sa=SAConfig(iters=40, seed=0))
+    cands = _quick_cands(6)
+    with ExplorationEngine({"TF": g}, cfg, batched_screen=True) as eng:
+        a = eng.run(cands, screen_keep=0.5)
+        screen_a = [(p.arch, p.objective) for p in eng.last_screen]
+    with ExplorationEngine({"TF": g}, cfg, batched_screen=False) as eng:
+        b = eng.run(cands, screen_keep=0.5)
+        screen_b = [(p.arch, p.objective) for p in eng.last_screen]
+    assert screen_a == screen_b
+    assert [(p.arch, p.objective) for p in a] \
+        == [(p.arch, p.objective) for p in b]
+
+
+def test_eval_mapping_archs_refuses_foreign_signature(setup):
+    arch, g, groups, init = setup
+    ev = Evaluator(arch, g)
+    other = arch.replace(glb_kb=arch.glb_kb * 2)
+    assert analysis_signature(other) != analysis_signature(arch)
+    with pytest.raises(ValueError, match="signature"):
+        ev.eval_mapping_archs(init, 8, [other])
+    # bandwidth-only siblings are accepted and bit-identical to per-arch
+    # scalar evaluation
+    sibs = [arch.replace(noc_bw=nb, dram_bw=db)
+            for nb in (8.0, 16.0) for db in (64.0, 128.0)]
+    E, D = ev.eval_mapping_archs(init, 8, sibs)
+    for c, sib in enumerate(sibs):
+        r = Evaluator(sib, g).evaluate(init, 8)
+        assert r.energy_j == E[c] and r.delay_s == D[c]
+
+
+# ---------------------------------------------------------------------------
+# Pareto sweep + cached CDF
+# ---------------------------------------------------------------------------
+
+@SET
+@given(vals=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3),
+                               st.integers(0, 3)), max_size=40))
+def test_pareto_sweep_matches_quadratic_small_ints(vals):
+    vals = [tuple(float(x) for x in v) for v in vals]
+    assert _pareto_mask_sweep(vals) == _pareto_mask_quadratic(vals)
+
+
+@SET
+@given(vals=st.lists(st.tuples(st.floats(-1e3, 1e3),
+                               st.floats(-1e3, 1e3)), max_size=40))
+def test_pareto_sweep_matches_quadratic_2d_floats(vals):
+    vals = [tuple(v) for v in vals]
+    assert _pareto_mask_sweep(vals) == _pareto_mask_quadratic(vals)
+
+
+def test_group_draw_cdf_cached_and_correct(setup):
+    arch, g, groups, init = setup
+    a = group_draw_cdf(groups, arch.n_cores)
+    b = group_draw_cdf(list(groups), arch.n_cores)
+    assert a is b                        # one cached CDF per (sizes, cores)
+    assert a[-1] == 1.0
+    assert not a.flags.writeable         # shared read-only
+    assert np.all(np.diff(a) >= 0)
+    other = group_draw_cdf(groups, arch.n_cores + 1)
+    assert other is not a
