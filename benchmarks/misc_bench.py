@@ -481,6 +481,59 @@ def batched_parity(n_random: int = 24) -> Dict:
     return out
 
 
+def moe_throughput(iters: int = 300, rounds: int = 4) -> Dict:
+    """Routed-MoE graph analyze/eval cost vs its equal-expected-FLOP dense
+    collapse.
+
+    Same (arch, SA budget, seed) on two lm_graph exports of
+    granite-moe-3b-a800m (one block, seq=256): ``family="moe"`` — the real
+    expected-traffic graph, 40 expert branches at ``traffic_scale = 8/40``
+    — and the legacy ``family="moe-dense"`` collapse into one fat FFN.
+    Their total expected MACs agree to <1% (the router is the only extra
+    work), so the iters/s ratio isolates what the E-way branch structure
+    costs the analyzer/evaluator per SA iteration: the MoE graph has ~6x
+    the layers (hence bigger groups, wider contribution streams and more
+    NoC flows), which is the price of modeling expert-parallel mappings at
+    all.  Recorded in BENCH_dse.json (``moe_eval``).
+    """
+    from repro.configs import get_config
+    from repro.core.workloads.lm_graph import lm_graph
+
+    arch = _quick_grid()[0]
+    base = get_config("granite-moe-3b-a800m")
+    legs: Dict[str, Dict] = {}
+    for fam in ("moe", "moe-dense"):
+        g = lm_graph(base.replace(family=fam), seq=256, n_layers=1)
+        groups = partition_graph(g, arch, 8)
+        ev = CachedEvaluator(arch, g)
+        init = tangram_map(groups, g, arch)
+        sa_optimize(g, arch, groups, 8, SAConfig(iters=50, seed=0),
+                    init=init, evaluator=ev)               # warm caches
+        best = 1e9
+        for _ in range(rounds):
+            t0 = time.time()
+            sa_optimize(g, arch, groups, 8, SAConfig(iters=iters, seed=1),
+                        init=init, evaluator=ev)
+            best = min(best, time.time() - t0)
+        legs[fam] = {"n_layers": len(g.layers), "n_groups": len(groups),
+                     "expected_macs": float(g.total_expected_macs()),
+                     "iters_per_s": iters / best}
+    slowdown = (legs["moe-dense"]["iters_per_s"]
+                / legs["moe"]["iters_per_s"])
+    macs_ratio = (legs["moe"]["expected_macs"]
+                  / legs["moe-dense"]["expected_macs"])
+    print(f"[moe-eval] routed graph ({legs['moe']['n_layers']} layers): "
+          f"{legs['moe']['iters_per_s']:.0f} SA iters/s vs dense collapse "
+          f"({legs['moe-dense']['n_layers']} layers): "
+          f"{legs['moe-dense']['iters_per_s']:.0f} iters/s -> "
+          f"{slowdown:.1f}x branch-structure cost "
+          f"(expected-MAC parity {macs_ratio:.4f})")
+    return {"iters": iters, "moe": legs["moe"],
+            "dense": legs["moe-dense"],
+            "dense_over_moe_iters_ratio": slowdown,
+            "expected_macs_ratio": macs_ratio}
+
+
 def dse_bench(quick: bool = False) -> Dict:
     """The BENCH_dse.json payload: screening / SA / sweep before-vs-after.
 
@@ -502,6 +555,7 @@ def dse_bench(quick: bool = False) -> Dict:
         "lockstep_sa": lockstep_sa_throughput(rounds=2 if quick else 8),
         "sweep_n4": sweep_n4_throughput(rounds=1 if quick else 4),
         "evaluator": sa_throughput(),
+        "moe_eval": moe_throughput(rounds=2 if quick else 4),
     }
     base_path = Path(__file__).resolve().parent / "pr4_baseline.json"
     if base_path.exists():

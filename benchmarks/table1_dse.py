@@ -26,6 +26,7 @@ bit-identical to the unsharded sweep:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 from pathlib import Path
@@ -35,7 +36,7 @@ from repro.core.dse import DSEConfig, grid_candidates
 from repro.core.explore import (ExplorationEngine, merge_checkpoints,
                                 pareto_frontier, parse_shard_spec)
 from repro.core.sa import SAConfig
-from repro.core.workloads import transformer
+from repro.core.workloads import make_workload, transformer
 
 from .common import RESULTS, cached
 
@@ -77,8 +78,18 @@ def default_checkpoint(quick: bool, shard: Tuple[int, int]) -> Path:
 def _run(quick: bool = False, shard: Tuple[int, int] = (0, 1),
          checkpoint: Optional[Path] = None, force: bool = False,
          n_workers: Optional[int] = None,
-         screen: Union[None, float, str] = None) -> Dict:
+         screen: Union[None, float, str] = None,
+         workloads_cli: Optional[Dict[str, str]] = None,
+         weights: Optional[Dict[str, float]] = None) -> Dict:
     cands, workloads, cfg, keep = _setup(quick)
+    if workloads_cli:
+        # --workload NAME=SPEC replaces the default workload set entirely:
+        # mixing defaults with explicit portfolios invites half-specified
+        # sweeps whose fingerprints surprise
+        workloads = {name: make_workload(spec)
+                     for name, spec in workloads_cli.items()}
+    if weights:
+        cfg = dataclasses.replace(cfg, workload_weights=dict(weights))
     ckpt = Path(checkpoint) if checkpoint else default_checkpoint(quick, shard)
     if force and ckpt.exists():
         # the sweep fingerprint versions cfg+workloads, not the cost model:
@@ -179,11 +190,28 @@ def cli() -> None:
                     help="screening mode: a keep fraction (0..1] or 'auto' "
                     "for the adaptive gap rule (unsharded runs only); "
                     "default derives from --quick / N_REFINE")
+    ap.add_argument("--workload", action="append", metavar="NAME=SPEC",
+                    help="replace the workload set (repeatable); SPEC is a "
+                    "registry preset (tf-quick, moe-quick, mla-quick, ...) "
+                    "or a parameterized spec — see "
+                    "repro.core.workloads.make_workload")
+    ap.add_argument("--weight", action="append", metavar="NAME=W",
+                    help="portfolio traffic-share weight for workload NAME "
+                    "(repeatable); turns the reduction into the weighted "
+                    "geomean and stamps the weights into the sweep "
+                    "fingerprint")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     screen: Union[None, float, str] = None
     if args.screen is not None:
         screen = "auto" if args.screen == "auto" else float(args.screen)
+    workloads_cli: Optional[Dict[str, str]] = None
+    if args.workload:
+        workloads_cli = dict(item.split("=", 1) for item in args.workload)
+    weights: Optional[Dict[str, float]] = None
+    if args.weight:
+        weights = {k: float(v) for k, v in
+                   (item.split("=", 1) for item in args.weight)}
 
     if args.merge:
         if not args.checkpoint:
@@ -193,10 +221,11 @@ def cli() -> None:
 
     shard = parse_shard_spec(args.shard)
     if args.quick or shard != (0, 1) or args.out or args.checkpoint \
-            or screen is not None:
+            or screen is not None or workloads_cli or weights:
         data = _run(quick=args.quick, shard=shard,
                     checkpoint=args.checkpoint, force=args.force,
-                    n_workers=args.workers, screen=screen)
+                    n_workers=args.workers, screen=screen,
+                    workloads_cli=workloads_cli, weights=weights)
         if data["best"] is not None:
             print(f"[table1] shard best: {data['best_arch']} "
                   f"obj={data['best']['objective']:.3e} "

@@ -23,6 +23,17 @@ layer's contribution and its incident edges are recomputed — every other
 stream replays from cache.  Replaying a stream with ``np.add.at`` (unbuffered,
 applied in index order) reproduces the exact float-add sequence of a direct
 computation, keeping cached and uncached results bit-identical.
+
+Expected-traffic formulation (PR 6): per-layer ``traffic_scale`` /
+``weight_traffic_scale`` and per-edge multiplicities multiply the recorded
+contributions (MACs, compute time, GLB fmap footprint/traffic, DRAM flows,
+dependency-edge volumes) at the recording sites in ``_layer_contribs`` and
+``_dep_traffic``.  Both the scalar and the batched path share
+``_gather_stream``, so they inherit the scaling identically, and every
+multiplication is guarded behind ``scale != 1.0`` — graphs with all scales
+at 1.0 replay the byte-for-byte pre-refactor streams.  The evaluator needs
+no change: its energy/delay math only reads the (already scaled)
+``GroupAnalysis`` arrays.
 """
 
 from __future__ import annotations
@@ -625,24 +636,44 @@ class Analyzer:
         cores, rarr, _ = self._region_arrays(name, ms, bu)
         nodes = self._core_nodes[cores]
         bpe = lyr.bytes_per_elem
+        # expected-traffic scales: activations/compute (ts) and weight
+        # loads (ws).  Every application below is guarded behind != 1.0,
+        # so a dense layer's float-op sequence is exactly the pre-scale
+        # one — the bit-identity contract of the expected-traffic IR.
+        ts = lyr.traffic_scale
+        ws = lyr.weight_traffic_scale
 
         pre = Contribution()
         post = Contribution()
 
-        # compute: MACs proportional to ofmap share
+        # compute: MACs proportional to (expected) ofmap share
         elems = (rarr[:, 1] - rarr[:, 0]) * (rarr[:, 3] - rarr[:, 2]) \
             * (rarr[:, 5] - rarr[:, 4]) * (rarr[:, 7] - rarr[:, 6])
         mac_per_elem = lyr.macs(1) / max(1, lyr.ofmap_elems)
-        pre.add(T_CORE_MACS, cores, elems * mac_per_elem)
+        macs_v = elems * mac_per_elem
+        if ts != 1.0:
+            macs_v = macs_v * ts
+        pre.add(T_CORE_MACS, cores, macs_v)
 
-        # GLB footprint: weight slice + ofmap part (double-buffered fmaps)
+        # GLB footprint: weight slice + ofmap part (double-buffered fmaps);
+        # the fmap share is expected-resident, the weight slice stays dense
+        # (it must be held regardless of routing)
         w_share = lyr.weight_bytes() / max(1, ms.part[3]) if lyr.has_weight else 0
-        pre.add(T_GLB, cores, elems * bpe * 2 + w_share)
+        fmap_foot = elems * bpe * 2
+        if ts != 1.0:
+            fmap_foot = fmap_foot * ts
+        pre.add(T_GLB, cores, fmap_foot + w_share)
 
         # intra-core engine: per-core compute time + GLB traffic of the
         # chosen dataflows, in correspondence order (the order the scalar
-        # engine iterated regions in); pure geometry, cached per Part
+        # engine iterated regions in); pure geometry, cached per Part —
+        # the expected scale multiplies outside the cache, so equal-dims
+        # layers with different scales share the geometry entry content
         t_arr, rd, wr = self._intra_geometry(name, ms.part, bu)
+        if ts != 1.0:
+            t_arr = t_arr * ts
+            rd = rd * ts
+            wr = wr * ts
         u_cores = np.asarray(ms.cg, dtype=np.int64)
         pre.add(T_CORE_TIME, u_cores, t_arr)
         zeros = np.zeros(len(rd), dtype=np.int64)
@@ -654,6 +685,8 @@ class Analyzer:
             # each core holds the K-slice of its region (C,R,S full)
             k_span = (rarr[:, 7] - rarr[:, 6])
             w_bytes_core = k_span / max(1, lyr.K) * lyr.weight_bytes()
+            if ws != 1.0:
+                w_bytes_core = w_bytes_core * ws
             pre.weight_total = float(w_bytes_core.sum())
             self._dram_flow(pre, T_EDGE_AM, T_DRAM_AM, ms.fd[1], nodes,
                             w_bytes_core / n_passes, to_core=True)
@@ -662,8 +695,11 @@ class Analyzer:
         preds = [p for p in g.preds(name)]
         external = (not preds) or any(p not in in_group for p in preds)
         if external and ms.fd[0] >= 0:
-            # full needed ifmap from DRAM (input of DNN or previous group)
+            # expected needed ifmap from DRAM (input of DNN or previous
+            # group): the layer only fetches the tokens it processes
             if_bytes = self._external_ifmap_bytes(lyr, rarr, bu) * bpe
+            if ts != 1.0:
+                if_bytes = if_bytes * ts
             self._dram_flow(post, T_EDGE, T_DRAM, ms.fd[0], nodes,
                             if_bytes, to_core=True)
             post.add(T_CORE_IN, cores, if_bytes)
@@ -671,6 +707,8 @@ class Analyzer:
         # ---- ofmaps ------------------------------------------------------
         if ms.fd[2] >= 0:
             of_bytes = elems * bpe
+            if ts != 1.0:
+                of_bytes = of_bytes * ts
             self._dram_flow(post, T_EDGE, T_DRAM, ms.fd[2], nodes,
                             of_bytes.astype(float), to_core=False)
             post.add(T_CORE_OUT, cores, of_bytes)
@@ -896,11 +934,18 @@ class Analyzer:
 
         Consumers whose needed region is identical (K-partition siblings for
         channel-contracting layers) form one multicast set per producer part.
+
+        Expected-traffic scaling: the flow is the dense overlap volume times
+        the producer's ``traffic_scale`` times the edge's multiplicity (the
+        producer only emits its expected share; a routed consumer reading a
+        fraction of a dense producer carries that fraction as edge
+        multiplicity).  The guard keeps dense graphs bit-identical.
         """
         prod, cons = self.g.layers[pname], self.g.layers[cname]
         p_cores, _, p_ord = self._region_arrays(pname, pms, bu)
         c_cores, _, c_ord = self._region_arrays(cname, cms, bu)
         bpe = prod.bytes_per_elem
+        escale = prod.traffic_scale * self.g.edge_mult(pname, cname)
 
         # needed region of each consumer part, in producer-ofmap coordinates,
         # with its multicast grouping (consumer parts sharing a need row)
@@ -927,6 +972,8 @@ class Analyzer:
             P = len(p_cores)
             vols = ov_geo[p_ord[:, None],
                           c_ord[mc_first][None, :]].T * np.float64(bpe)
+            if escale != 1.0:
+                vols = vols * escale
             cn = mc_cn                                        # (G, Qmax)
             off_node = (p_nodes[None, :, None] != cn[:, None, :]) \
                 & mc_live[:, None, :]                         # (G, P, Qmax)
@@ -984,6 +1031,8 @@ class Analyzer:
         else:
             ov = ov_geo[p_ord[:, None], c_ord[None, :]]   # (P, Q) elems
             vols = ov.astype(float) * bpe
+            if escale != 1.0:
+                vols = vols * escale
             same = p_nodes[:, None] == c_nodes[None, :]
             vols_off = np.where(same, 0.0, vols)
             P, Q = vols.shape

@@ -54,6 +54,12 @@ class DSEConfig:
     batch: int = 64
     sa: SAConfig = field(default_factory=lambda: SAConfig(iters=1500))
     keep_mappings: bool = False
+    # portfolio co-exploration: traffic-share weight per workload name
+    # (weighted geometric mean in reduce_tasks).  None — and ONLY None —
+    # takes the historical unweighted path; explicit all-1.0 weights are
+    # bit-identical to it but stamp a ``:w=`` segment into the sweep
+    # fingerprint.  Missing names default to weight 1.0.
+    workload_weights: Optional[Dict[str, float]] = None
 
 
 @dataclass
@@ -131,21 +137,44 @@ def reduce_tasks(arch: ArchConfig, cfg: DSEConfig,
     """Geometric-mean reduction of per-workload task results into one
     scored :class:`DSEPoint` (paper's ``MC^a * E^b * D^g`` objective).
 
+    With ``cfg.workload_weights`` set this is the *weighted* geomean
+    ``exp(sum_i w_i log E_i / sum_i w_i)`` — the portfolio co-exploration
+    objective where ``w_i`` is workload ``i``'s traffic share.  Weights
+    must be positive; names absent from the dict weigh 1.0.
+
     ``task_results`` must iterate in a deterministic workload order (the
     engine uses sorted names) — the log-domain accumulation is float
     arithmetic, so the order is part of the bit-identity contract.
+    ``workload_weights=None`` reproduces the historical float-op sequence
+    exactly; uniform explicit 1.0 weights are bit-identical to it because
+    ``1.0 * x == x`` and a sum of ones equals the exact float count.
     """
     mc = evaluate_mc(arch).total
+    w = cfg.workload_weights
     logE = logD = 0.0
+    wsum = 0.0
     per: Dict[str, Tuple[float, float]] = {}
     maps: Dict[str, Mapping] = {}
     for name, tr in task_results.items():
         per[name] = (tr.energy_j, tr.delay_s)
         if cfg.keep_mappings and tr.mapping is not None:
             maps[name] = tr.mapping
-        logE += math.log(tr.energy_j)
-        logD += math.log(tr.delay_s)
-    n = max(1, len(task_results))
+        le = math.log(tr.energy_j)
+        ld = math.log(tr.delay_s)
+        if w is not None:
+            wi = float(w.get(name, 1.0))
+            if wi <= 0 or not math.isfinite(wi):
+                raise ValueError(
+                    f"workload_weights[{name!r}] = {wi} must be a positive "
+                    f"finite traffic share")
+            wsum += wi
+            if wi != 1.0:
+                le *= wi
+                ld *= wi
+        logE += le
+        logD += ld
+    n = (wsum if wsum > 0 else 1.0) if w is not None \
+        else max(1, len(task_results))
     E = math.exp(logE / n)
     D = math.exp(logD / n)
     obj = (mc ** cfg.alpha) * (E ** cfg.beta) * (D ** cfg.gamma)
@@ -234,6 +263,15 @@ def joint_reuse_dse(chiplet_grid: Sequence[ArchConfig],
     (base_arch, product-of-objectives) sorted ascending.  The flattened
     (base x scale) grid is evaluated through the engine, so ``n_workers``
     parallelizes it with the same determinism guarantee as ``run_dse``.
+
+    With ``cfg.workload_weights`` set this is *portfolio co-exploration*:
+    each scale's objective is the weighted geomean over the workload
+    portfolio (traffic shares), so the selected chiplet is the one whose
+    tilings best serve the expected deployment mix — e.g. a 0.75/0.25
+    dense/MoE portfolio — rather than an unweighted workload zoo.  The
+    weights are stamped into the sweep fingerprint (schema-v2 checkpoint
+    header ``:w=`` segment), so differently-weighted portfolios never
+    share checkpoint records.
     """
     scales = list(scale_factors)
     flat = [scaled_arch(base, s) for base in chiplet_grid for s in scales]

@@ -241,13 +241,22 @@ def graph_fingerprint(g: Graph) -> str:
 
     ``Layer`` is a frozen dataclass, so its ``repr`` enumerates every
     field; two graphs with equal structure hash equally regardless of
-    insertion order.
+    insertion order.  Expected-traffic scales and edge multiplicities are
+    ``repr=False`` (they would otherwise churn every dense fingerprint),
+    so they hash explicitly here — but only when non-default, keeping
+    dense graphs' digests byte-identical to pre-scale checkpoints.
     """
     import hashlib
     h = hashlib.sha1()
     for name in sorted(g.layers):
-        h.update(repr((name, g.layers[name])).encode())
+        lyr = g.layers[name]
+        h.update(repr((name, lyr)).encode())
+        if lyr.traffic_scale != 1.0 or lyr.weight_traffic_scale != 1.0:
+            h.update(repr((name, "scale", lyr.traffic_scale,
+                           lyr.weight_traffic_scale)).encode())
     h.update(repr(sorted(g.edges)).encode())
+    if g.edge_mults:
+        h.update(repr(("mults", sorted(g.edge_mults.items()))).encode())
     h.update(repr(sorted(g.input_layers)).encode())
     return h.hexdigest()[:12]
 
@@ -773,6 +782,14 @@ class ExplorationEngine:
         self.workloads = dict(workloads)
         self._wl_names = sorted(self.workloads)
         self.cfg = cfg
+        ww = getattr(cfg, "workload_weights", None)
+        if ww is not None:
+            unknown = sorted(set(ww) - set(self.workloads))
+            if unknown:
+                raise ValueError(
+                    f"workload_weights name(s) {unknown} not in this "
+                    f"sweep's workloads {self._wl_names} — a typo here "
+                    f"would silently weigh the portfolio uniformly")
         self.n_workers = max(1, int(n_workers))
         self.checkpoint = checkpoint
         self.progress = progress
@@ -822,12 +839,22 @@ class ExplorationEngine:
         wl = ",".join(f"{n}:{graph_fingerprint(self.workloads[n])}"
                       for n in self._wl_names)
         swap, ladder = re_knobs or (c.sa.swap_every, c.sa.t_ladder)
+        # portfolio weights join the fingerprint ONLY when set: weightless
+        # sweeps keep their historical header and stay resumable, while a
+        # re-weighted portfolio never silently reuses old records.  Note
+        # the segment sits BEFORE :wl= (realize's header parser partitions
+        # on ':wl=' and must keep seeing the workload list last).
+        w = ""
+        if getattr(c, "workload_weights", None) is not None:
+            ww = c.workload_weights
+            w = "w=" + ",".join(f"{n}:{float(ww.get(n, 1.0)):g}"
+                                for n in self._wl_names) + ":"
         return (f"dse:v{schema}:a{c.alpha:g}:b{c.beta:g}:g{c.gamma:g}:"
                 f"B{c.batch}:"
                 f"sa({c.sa.iters},{c.sa.t0:g},{c.sa.t_end:g},{c.sa.seed},"
                 f"{c.sa.beta:g},{c.sa.gamma:g},{c.sa.n_chains},"
                 f"{swap},{ladder:g}):sa={int(use_sa)}:"
-                f"wl={wl}")
+                f"{w}wl={wl}")
 
     def _open_sweep(self, checkpoint: Union[str, Path],
                     use_sa: bool) -> ResumableSweep:

@@ -14,15 +14,21 @@ from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
 from .hw import ArchConfig
-from .workload import Graph, LayerGroup
+from .workload import Graph, LayerGroup, edge_volume
 
 
 def pick_batch_unit(g: Graph, names: Sequence[str], arch: ArchConfig,
                     total_batch: int, max_unit: int = 64) -> int:
-    """Largest power-of-two batch unit whose fmap footprint fits aggregate GLB."""
+    """Largest power-of-two batch unit whose fmap footprint fits aggregate GLB.
+
+    Feature-map footprints use the *expected* ofmap volume (a routed MoE
+    expert holds its expected token share resident); weights stay dense —
+    the full weight slice must be resident regardless of routing.  Dense
+    graphs see the exact integer arithmetic of the static-volume model.
+    """
     glb_total = arch.core_glb_bytes * arch.n_cores
     weights = sum(g.layers[n].weight_bytes() for n in names)
-    fmaps_1 = sum(g.layers[n].ofmap_bytes(1) * 2 for n in names)
+    fmaps_1 = sum(g.layers[n].expected_ofmap_bytes(1) * 2 for n in names)
     bu = 1
     while (bu * 2 <= min(total_batch, max_unit)
            and weights + fmaps_1 * bu * 2 <= glb_total):
@@ -36,25 +42,35 @@ def _segment_cost(g: Graph, names: Sequence[str], arch: ArchConfig,
     sset = set(names)
     bu = pick_batch_unit(g, names, arch, total_batch)
     n_passes = max(1, -(-total_batch // bu))
-    # DRAM traffic: group-boundary fmaps (in and out) + weights once
+    # DRAM traffic: group-boundary fmaps (in and out) + weights once.
+    # Boundary transfers go through edge_volume — the expected-traffic
+    # volume (producer traffic_scale x edge multiplicity); graph-input
+    # fetches scale by the consumer's traffic_scale; weight loads by
+    # weight_traffic_scale.  All guards reduce to the exact dense integer
+    # sums when no scale is set.
     boundary = 0
     for s, d in g.edges:
         if (s in sset) != (d in sset):
-            boundary += g.layers[s].ofmap_bytes(total_batch)
+            boundary += edge_volume(g, s, d, total_batch)
     for n in names:
         preds = g.preds(n)
         if not preds and n in sset:
-            boundary += g.layers[n].ifmap_elems * g.layers[n].bytes_per_elem \
-                * total_batch
-    weights = sum(g.layers[n].weight_bytes() for n in names)
+            lyr = g.layers[n]
+            fetch = lyr.ifmap_elems * lyr.bytes_per_elem * total_batch
+            if lyr.traffic_scale != 1.0:
+                fetch = fetch * lyr.traffic_scale
+            boundary += fetch
+    weights = sum(g.layers[n].expected_weight_bytes() for n in names)
     dram = boundary + weights
     # fill/drain loss: depth extra passes, scaled by per-pass work share
     depth = len(names)
-    work = sum(g.layers[n].macs(bu) for n in names)
+    work = sum(g.layers[n].expected_macs(bu) for n in names)
     fill = work * (depth - 1) / max(1, n_passes) / max(1, arch.n_cores)
-    # GLB overcommit pressure
+    # GLB overcommit pressure (expected-resident fmaps, dense weights)
     glb_total = arch.core_glb_bytes * arch.n_cores
-    foot = weights + sum(g.layers[n].ofmap_bytes(bu) * 2 for n in names)
+    dense_weights = sum(g.layers[n].weight_bytes() for n in names)
+    foot = dense_weights \
+        + sum(g.layers[n].expected_ofmap_bytes(bu) * 2 for n in names)
     pressure = max(0.0, foot - glb_total) * 4.0
     # core starvation: fewer cores than layers is infeasible
     if len(names) > arch.n_cores:

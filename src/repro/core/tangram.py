@@ -59,8 +59,10 @@ def stripe_lms(group: LayerGroup, g: Graph, arch: ArchConfig,
                n_dram: int) -> LMS:
     """Allocate column stripes proportional to MACs; partition inside each."""
     names = list(group.names)
-    macs = np.array([max(1, g.layers[n].macs(group.batch_unit)) for n in names],
-                    dtype=float)
+    # expected MACs: a routed MoE expert at top_k/E share gets a
+    # proportionally thinner stripe (dense layers see the exact old ints)
+    macs = np.array([max(1, g.layers[n].expected_macs(group.batch_unit))
+                     for n in names], dtype=float)
     share = macs / macs.sum()
     # stripe widths in columns, each layer >= 1 column, total == x_cores
     X = arch.x_cores
@@ -98,8 +100,10 @@ def _core_stripe_lms(group: LayerGroup, g: Graph, arch: ArchConfig,
                      n_dram: int) -> LMS:
     """Stripe at core granularity when there are more layers than columns."""
     names = list(group.names)
-    macs = np.array([max(1, g.layers[n].macs(group.batch_unit)) for n in names],
-                    dtype=float)
+    # expected MACs: a routed MoE expert at top_k/E share gets a
+    # proportionally thinner stripe (dense layers see the exact old ints)
+    macs = np.array([max(1, g.layers[n].expected_macs(group.batch_unit))
+                     for n in names], dtype=float)
     share = macs / macs.sum()
     M = arch.n_cores
     sizes = np.maximum(1, np.floor(share * M).astype(int))

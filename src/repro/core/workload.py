@@ -5,15 +5,30 @@ contraction structure (C input channels, RxS kernel, stride) and a weight
 flag.  This is enough for the encoding, the analyzer, the intra-core tiling
 search and both evaluators.  Transformer / SSM / MoE ops are expressed in the
 same cube language (see core/workloads/).
+
+Expected-traffic formulation (PR 6): the paper assumes every layer moves its
+full dense volume each pass.  Data-dependent workloads (sparse MoE routing,
+speculative paths) break that, so each layer carries *expected-traffic
+scales* — ``traffic_scale`` for activations/compute and
+``weight_traffic_scale`` for weight loads — and each edge may carry a
+*multiplicity*.  Cube dims stay dense (they define the mapping space and
+buffer provisioning); the scales multiply the analyzer's traffic/compute
+contributions.  ``1.0`` everywhere is bit-identical to the dense model: all
+consumers guard scaling behind ``scale != 1.0`` so the float-op sequence of
+an unscaled graph is exactly the pre-refactor one.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 
 LayerKind = str  # conv | fc | pool | eltwise | matmul | depthwise
+
+# an edge input to Graph.add: a producer name, optionally with an
+# expected-traffic multiplicity on the producer->consumer transfer
+EdgeInput = Union[str, Tuple[str, float]]
 
 
 @dataclass(frozen=True)
@@ -31,17 +46,36 @@ class Layer:
     groups: int = 1                 # grouped conv (ResNeXt); C is per-layer total
     bytes_per_elem: int = 1         # int8 inference default
     n_inputs: int = 1               # eltwise add has 2
+    # expected fraction of the dense volume this layer computes/moves per
+    # pass: activations+MACs (traffic_scale) and weight loads
+    # (weight_traffic_scale).  A routed MoE expert with top_k of E experts
+    # active carries traffic_scale = top_k / E.  repr=False keeps the
+    # dataclass repr — and therefore explore.graph_fingerprint for dense
+    # graphs — byte-identical to the pre-scale IR, so existing sweep
+    # checkpoints stay resumable (eq/hash still include the fields, which
+    # is what the analyzer's _GEO_CACHE keys rely on).
+    traffic_scale: float = field(default=1.0, repr=False)
+    weight_traffic_scale: float = field(default=1.0, repr=False)
     # 'matmul' layers contract activations with activations (attention):
     # their "weight" operand is itself a produced tensor, so has_weight=False.
 
     def __post_init__(self):
         if self.K <= 0 or self.H <= 0 or self.W <= 0:
             raise ValueError(f"bad ofmap dims for {self.name}")
+        if self.traffic_scale <= 0 or self.weight_traffic_scale <= 0:
+            raise ValueError(
+                f"{self.name}: expected-traffic scales must be > 0 "
+                f"(traffic_scale={self.traffic_scale}, "
+                f"weight_traffic_scale={self.weight_traffic_scale})")
 
     # -- sizes per sample, in elements ---------------------------------------
     @property
     def has_weight(self) -> bool:
         return self.kind in ("conv", "fc", "depthwise")
+
+    @property
+    def is_scaled(self) -> bool:
+        return self.traffic_scale != 1.0 or self.weight_traffic_scale != 1.0
 
     @property
     def ofmap_elems(self) -> int:
@@ -71,7 +105,7 @@ class Layer:
         return 0
 
     def macs(self, batch: int = 1) -> int:
-        """Multiply-accumulates per ``batch`` samples."""
+        """Multiply-accumulates per ``batch`` samples (dense)."""
         if self.kind in ("conv",):
             m = self.K * self.H * self.W * (self.C // self.groups) * self.R * self.S
         elif self.kind == "fc":
@@ -92,24 +126,52 @@ class Layer:
     def weight_bytes(self) -> int:
         return self.weight_elems * self.bytes_per_elem
 
+    # -- expected-traffic sizes (dense value when the scale is 1.0, so the
+    # -- int type and bit pattern of unscaled graphs are untouched) ----------
+    def expected_macs(self, batch: int = 1) -> Union[int, float]:
+        m = self.macs(batch)
+        return m if self.traffic_scale == 1.0 else m * self.traffic_scale
+
+    def expected_ofmap_bytes(self, batch: int = 1) -> Union[int, float]:
+        b = self.ofmap_bytes(batch)
+        return b if self.traffic_scale == 1.0 else b * self.traffic_scale
+
+    def expected_weight_bytes(self) -> Union[int, float]:
+        b = self.weight_bytes()
+        return b if self.weight_traffic_scale == 1.0 \
+            else b * self.weight_traffic_scale
+
 
 @dataclass
 class Graph:
-    """DNN DAG.  Edges carry producer->consumer feature-map dependencies."""
+    """DNN DAG.  Edges carry producer->consumer feature-map dependencies;
+    an entry in ``edge_mults`` multiplies the expected traffic of that edge
+    (absent == 1.0, the dense transfer)."""
     name: str
     layers: Dict[str, Layer] = field(default_factory=dict)
     edges: List[Tuple[str, str]] = field(default_factory=list)
     # graph inputs: layers whose ifmaps come from DRAM (the DNN input)
     input_layers: List[str] = field(default_factory=list)
+    edge_mults: Dict[Tuple[str, str], float] = field(default_factory=dict)
 
-    def add(self, layer: Layer, inputs: Sequence[str] = ()) -> Layer:
+    def add(self, layer: Layer, inputs: Sequence[EdgeInput] = ()) -> Layer:
         if layer.name in self.layers:
             raise ValueError(f"duplicate layer {layer.name}")
-        self.layers[layer.name] = layer
-        for src in inputs:
+        parsed = []
+        for item in inputs:                    # validate BEFORE mutating
+            src, mult = item if isinstance(item, tuple) else (item, 1.0)
             if src not in self.layers:
                 raise ValueError(f"unknown input {src} for {layer.name}")
+            if mult <= 0:
+                raise ValueError(
+                    f"edge {src}->{layer.name}: multiplicity must be "
+                    f"> 0, got {mult}")
+            parsed.append((src, mult))
+        self.layers[layer.name] = layer
+        for src, mult in parsed:
             self.edges.append((src, layer.name))
+            if mult != 1.0:
+                self.edge_mults[(src, layer.name)] = float(mult)
         if not inputs:
             self.input_layers.append(layer.name)
         return layer
@@ -120,6 +182,10 @@ class Graph:
 
     def succs(self, name: str) -> List[str]:
         return [d for s, d in self.edges if s == name]
+
+    def edge_mult(self, src: str, dst: str) -> float:
+        """Expected-traffic multiplicity of one edge (1.0 == dense)."""
+        return self.edge_mults.get((src, dst), 1.0)
 
     def topo_order(self) -> List[str]:
         indeg = {n: 0 for n in self.layers}
@@ -144,23 +210,62 @@ class Graph:
     def total_macs(self, batch: int = 1) -> int:
         return sum(l.macs(batch) for l in self.layers.values())
 
+    def total_expected_macs(self, batch: int = 1) -> float:
+        """Expected MACs per ``batch`` samples (== total_macs when dense)."""
+        return sum(l.expected_macs(batch) for l in self.layers.values())
+
     def total_weight_bytes(self) -> int:
         return sum(l.weight_bytes() for l in self.layers.values())
+
+    @property
+    def is_scaled(self) -> bool:
+        """True when any expected-traffic scale or multiplicity != 1.0."""
+        return bool(self.edge_mults) \
+            or any(l.is_scaled for l in self.layers.values())
 
     def subgraph(self, names: Sequence[str], name: Optional[str] = None) -> "Graph":
         keep = set(names)
         g = Graph(name or f"{self.name}[{len(keep)}]")
         g.layers = {n: self.layers[n] for n in names}
         g.edges = [(s, d) for s, d in self.edges if s in keep and d in keep]
+        g.edge_mults = {(s, d): m for (s, d), m in self.edge_mults.items()
+                        if s in keep and d in keep}
         g.input_layers = [n for n in names
                           if not any(d == n and s in keep for s, d in self.edges)]
         return g
 
     def validate(self) -> None:
         self.topo_order()
+        edge_set = set(self.edges)
         for s, d in self.edges:
             if s not in self.layers or d not in self.layers:
                 raise ValueError(f"dangling edge {s}->{d}")
+        for (s, d), m in self.edge_mults.items():
+            if (s, d) not in edge_set:
+                raise ValueError(f"multiplicity on non-edge {s}->{d}")
+            if m <= 0:
+                raise ValueError(f"edge {s}->{d}: multiplicity {m} <= 0")
+
+
+def dense_twin(g: Graph) -> Graph:
+    """The same DAG with every expected-traffic scale/multiplicity reset to
+    1.0.  Returns ``g`` itself when it is already dense (the common case —
+    no copy, so dense-path callers stay bit-identical and allocation-free).
+
+    The realization subsystem diffs measured programs (which execute the
+    dense cubes) against this twin's predictions to recover per-axis
+    expected-traffic factors — see ``repro.realize.measure``.
+    """
+    if not g.is_scaled:
+        return g
+    out = Graph(g.name)
+    out.layers = {
+        n: (replace(l, traffic_scale=1.0, weight_traffic_scale=1.0)
+            if l.is_scaled else l)
+        for n, l in g.layers.items()}
+    out.edges = list(g.edges)
+    out.input_layers = list(g.input_layers)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +282,13 @@ class LayerGroup:
         return len(self.names)
 
 
-def edge_volume(g: Graph, src: str, dst: str, batch: int = 1) -> int:
-    """Bytes of feature map flowing src->dst per ``batch`` samples."""
+def edge_volume(g: Graph, src: str, dst: str,
+                batch: int = 1) -> Union[int, float]:
+    """Expected bytes of feature map flowing src->dst per ``batch`` samples:
+    the producer's dense ofmap, scaled by its ``traffic_scale`` and the
+    edge's multiplicity.  Dense graphs return the exact int of the old
+    static-volume model."""
     l = g.layers[src]
-    return l.ofmap_bytes(batch)
+    v = l.ofmap_bytes(batch)
+    m = l.traffic_scale * g.edge_mult(src, dst)
+    return v if m == 1.0 else v * m

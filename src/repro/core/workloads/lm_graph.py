@@ -4,15 +4,28 @@ Each transformer block becomes fc/matmul/eltwise layers with H = sequence
 length (the paper's Transformer treatment, Sec. VI-A); Mamba2 blocks map to
 in/out projections plus an SSD mixing layer whose contraction dim
 approximates the SSD arithmetic (2*d_state state I/O + chunk-local quadratic
-— exact MAC counts within a few %, noted here as the one approximation);
-MoE blocks use the *active* expert FFN width (top_k * d_ff).  bf16 serving
-feature maps (bytes_per_elem=2).
+— exact MAC counts within a few %, noted here as the one approximation).
+bf16 serving feature maps (bytes_per_elem=2).
+
+MoE blocks (``family="moe"``) export the *real* routed structure via
+:func:`repro.core.workloads.moe.add_moe_ffn`: a router, ``n_experts``
+expert branches carrying ``traffic_scale = top_k / n_experts``, optional
+shared experts, and an expected-active-width combine.  The historical
+approximation — one dense FFN of the active width ``top_k * d_ff`` — is
+kept reachable as the explicit legacy spec ``family="moe-dense"``
+(``dataclasses.replace(cfg, family="moe-dense")``): it matches the routed
+graph's *expected* FFN MACs by construction but hides the E-way branch
+structure and the dense-resident expert weights, so it under-counts weight
+capacity/traffic by ``n_experts / top_k``.  Kept only for A/B tests and
+old-result reproduction; see ``tests/test_expected_traffic.py`` for the
+regression pinning the two graphs' relative totals.
 """
 
 from __future__ import annotations
 
 from ...configs.base import ModelConfig
 from ..workload import Graph, Layer
+from .moe import add_moe_ffn
 
 
 def _fc(g, name, src, K, C, seq, bpe=2):
@@ -57,7 +70,15 @@ def lm_graph(cfg: ModelConfig, seq: int = 4096, n_layers: int = 0) -> Graph:
         a1 = g.add(Layer(name=f"{t}_add1", kind="eltwise", K=d, H=seq,
                          n_inputs=2, bytes_per_elem=2),
                    [o, prev] if prev else [o]).name
-        ff = (cfg.top_k * cfg.d_ff) if cfg.family == "moe" else cfg.d_ff
+        if cfg.family == "moe":
+            # real routed MoE: expected-traffic expert branches
+            prev = add_moe_ffn(g, t, a1, d, cfg.d_ff, cfg.n_experts,
+                               cfg.top_k, seq,
+                               n_shared=getattr(cfg, "n_shared_experts", 0))
+            continue
+        # legacy "moe-dense": collapse routing into one dense FFN of the
+        # active width (see module docstring)
+        ff = (cfg.top_k * cfg.d_ff) if cfg.family == "moe-dense" else cfg.d_ff
         if ff:
             up = _fc(g, f"{t}_up", a1, 2 * ff, d, seq)
             down = _fc(g, f"{t}_down", up, d, ff, seq)

@@ -21,6 +21,16 @@ XLA CPU backend while the cost model prices int8/bf16 dataflows — but the
 *ratios* are stable per technology, which is exactly what
 :mod:`.calibrate` fits.  Everything is per ONE pipeline pass (batch-unit
 batch), matching ``GroupAnalysis``'s per-pass convention.
+
+Expected-traffic graphs (MoE / routed workloads, ``graph.is_scaled``)
+lower to *dense-equivalent* programs — XLA executes the full cubes, while
+the analytical prediction carries the expected-traffic scales.  To keep
+the measured/predicted ratios comparable to the dense case (one stable
+factor per technology axis), each stage's measured numbers are multiplied
+by the per-axis expected-traffic factor ``pred_scaled / pred_dense``
+recovered from a :func:`repro.core.workload.dense_twin` evaluation of the
+identical LMS.  Dense graphs take the exact historical path (the twin IS
+the graph; no extra evaluation, no float ops).
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ from typing import Any, Dict, List, Tuple
 import numpy as np
 
 from ..core.evaluator import evaluator_for
+from ..core.workload import dense_twin
 from ..launch.hlo_analysis import analyze_hlo_text
 from .plan import RealizeCandidate
 from .program import RealizedProgram, StageProgram
@@ -61,6 +72,9 @@ class StageReport:
     pred_delay_s: float = 0.0
     pred_energy_j: float = 0.0
     pred_glb_overflow: float = 0.0
+    # expected-traffic factors applied to the measured side (scaled graphs
+    # only; empty for dense graphs — see module docstring)
+    expected_scale: Dict[str, float] = field(default_factory=dict)
 
     def ratios(self) -> Dict[str, float]:
         """measured / predicted per axis; only well-defined pairs appear."""
@@ -84,6 +98,8 @@ class StageReport:
         d["routes"] = dict(self.routes)
         d["coll_by_kind"] = dict(self.coll_by_kind)
         d["ratios"] = self.ratios()
+        if self.expected_scale:        # dense records keep their old shape
+            d["expected_scale"] = dict(self.expected_scale)
         return d
 
 
@@ -155,6 +171,11 @@ def measure_candidate(cand: RealizeCandidate, prog: RealizedProgram,
     own (arch, graph, LMS) — the identical code path the DSE scored it
     with, so the diff isolates model-vs-measurement error, not drift."""
     ev = evaluator_for(cand.arch, cand.graph)
+    # scaled graphs execute their dense-equivalent cubes; recover the
+    # per-axis expected-traffic factor from a dense-twin evaluation of the
+    # same LMS (dense graphs: twin IS the graph, no second evaluator)
+    twin = dense_twin(cand.graph)
+    ev_dense = ev if twin is cand.graph else evaluator_for(cand.arch, twin)
     reports: List[StageReport] = []
     for sp, (grp, lms) in zip(prog.stages, cand.mapping):
         if sp.compiled is None:
@@ -163,6 +184,15 @@ def measure_candidate(cand: RealizeCandidate, prog: RealizedProgram,
         # unamortized — exactly what the realized stage executes
         pred = ev.traffic_summary(grp, lms, grp.batch_unit)
         meas = _measure_stage(sp)
+        esc: Dict[str, float] = {}
+        if ev_dense is not ev:
+            dense = ev_dense.traffic_summary(grp, lms, grp.batch_unit)
+            esc = {k: (pred[k] / dense[k]) if dense[k] > 0 else 1.0
+                   for k in ("flops", "dram_bytes", "noc_bytes",
+                             "d2d_bytes")}
+            meas["flops"] *= esc["flops"]
+            meas["hbm_bytes"] *= esc["dram_bytes"]
+            meas["ici_bytes"] *= esc["noc_bytes"]
         reports.append(StageReport(
             index=sp.index, layers=sp.stage.layers, n_devices=sp.n_devices,
             routes=dict(sp.routes),
@@ -175,12 +205,14 @@ def measure_candidate(cand: RealizeCandidate, prog: RealizedProgram,
             pred_noc_bytes=pred["noc_bytes"],
             pred_d2d_bytes=pred["d2d_bytes"],
             pred_delay_s=pred["delay_s"], pred_energy_j=pred["energy_j"],
-            pred_glb_overflow=pred["glb_overflow_bytes"]))
+            pred_glb_overflow=pred["glb_overflow_bytes"],
+            expected_scale=esc))
     if execute:
         run = prog.execute(seed=seed)
         for sr, wall, dci in zip(reports, run["wall_s"], run["dci_bytes"]):
             sr.wall_s = wall
-            sr.dci_bytes = float(dci)
+            sr.dci_bytes = float(dci) * sr.expected_scale.get("d2d_bytes",
+                                                              1.0)
     return RealizationReport(
         key=cand.key, workload=cand.workload, arch_label=cand.arch.label(),
         tech=cand.arch.tech.name, batch_unit=prog.batch_unit,

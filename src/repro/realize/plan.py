@@ -61,49 +61,17 @@ class RealizeCandidate:
 # Workload resolution (checkpoints store graph fingerprints, not graphs)
 # ---------------------------------------------------------------------------
 
-def _tf(**kw) -> Graph:
-    from ..core.workloads import transformer
-    return transformer(**kw)
-
-
-WORKLOAD_PRESETS: Dict[str, Callable[[], Graph]] = {
-    # the table1 --quick grid's workload (and the CI realize smoke's)
-    "tf-quick": lambda: _tf(n_layers=2, d_model=128, d_ff=256, seq=64,
-                            name="tf-s"),
-    # the full Table-I workload
-    "tf-paper": lambda: _tf(),
-}
+from ..core.workloads import WORKLOAD_SPECS as WORKLOAD_PRESETS
+from ..core.workloads import make_workload
 
 
 def graph_from_spec(spec: str) -> Graph:
-    """Build a workload graph from a CLI spec.
+    """Build a workload graph from a by-name preset or CLI spec.
 
-    ``tf-quick`` / ``tf-paper``       — presets above
-    ``transformer:k=v,k=v,...``       — core/workloads transformer kwargs
-    ``lm:<config>[:seq=S[,n_layers=L]]`` — an LM architecture's layer DAG
+    Thin alias of :func:`repro.core.workloads.make_workload` — the single
+    registry every CLI resolves ``--workload NAME=SPEC`` through.
     """
-    if spec in WORKLOAD_PRESETS:
-        return WORKLOAD_PRESETS[spec]()
-    kind, _, rest = spec.partition(":")
-    if kind == "transformer":
-        kw: Dict[str, Union[int, str]] = {}
-        for item in filter(None, rest.split(",")):
-            k, _, v = item.partition("=")
-            kw[k] = v if k == "name" else int(v)
-        return _tf(**kw)
-    if kind == "lm":
-        from ..configs import get_config
-        from ..core.workloads.lm_graph import lm_graph
-        name, _, params = rest.partition(":")
-        kw = {}
-        for item in filter(None, params.split(",")):
-            k, _, v = item.partition("=")
-            kw[k] = int(v)
-        return lm_graph(get_config(name), **kw)
-    raise ValueError(
-        f"unknown workload spec {spec!r}; use a preset "
-        f"({', '.join(sorted(WORKLOAD_PRESETS))}), 'transformer:k=v,...' "
-        f"or 'lm:<config>[:seq=S,n_layers=L]'")
+    return make_workload(spec)
 
 
 _WL_FP = re.compile(r"(?:^|,)([^,:]+):([0-9a-f]{12})")

@@ -28,6 +28,15 @@ matmul's weight-side activations, SSD's dt/B/C streams) it is derived
 deterministically from the producer's output via ``jnp.resize`` — the MAC
 count and operand sizes the cost model priced are preserved exactly, which
 is what the measurement stage diffs against.
+
+Expected-traffic graphs (routed MoE: ``graph.is_scaled``) lower to their
+**dense-equivalent** programs: every expert branch executes its full cube
+(fc layers take their first in-stage predecessor as the activation operand
+— the dispatch/router edges are modeling-only — and a many-producer
+combine eltwise sums all expert outputs, which is the dense execution of
+the routed reduction).  The expected-traffic correction happens on the
+measurement side (``measure.py`` dense-twin factors), not here; MLA graphs
+are plain dense cubes and need nothing special.
 """
 
 from __future__ import annotations

@@ -1,0 +1,419 @@
+"""Expected-traffic IR: bit-identity, MoE/MLA graphs, portfolio weights.
+
+The refactor's contract is that dense graphs (every ``traffic_scale`` 1.0,
+no edge multiplicities) take the exact pre-refactor float-op sequence —
+scalar and batched — and that explicit all-1.0 scales are indistinguishable
+from the defaults.  The MoE/MLA builders then get structural + traffic
+regressions, and the weighted (portfolio) reduction is pinned against the
+unweighted path.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core.dse import DSEConfig, TaskResult, reduce_tasks, run_dse
+from repro.core.evaluator import Evaluator
+from repro.core.explore import (ExplorationEngine, graph_fingerprint,
+                                merge_checkpoints)
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import ArchConfig
+from repro.core.sa import SAConfig
+from repro.core.tangram import tangram_map
+from repro.core.workload import Graph, Layer, dense_twin, edge_volume
+from repro.core.workloads import (WORKLOAD_SPECS, make_workload,
+                                  mla_transformer, moe_transformer,
+                                  transformer)
+from repro.core.workloads.lm_graph import lm_graph
+
+REPO = Path(__file__).resolve().parent.parent
+
+SET = settings(max_examples=12, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+def _arch(glb_kb: int = 1024) -> ArchConfig:
+    return ArchConfig(x_cores=4, y_cores=3, xcut=2, ycut=1, noc_bw=32.0,
+                      d2d_bw=16.0, dram_bw=64.0, glb_kb=glb_kb,
+                      macs_per_core=512)
+
+
+# ---------------------------------------------------------------------------
+# workload zoo: one tiny graph per family, built two ways
+# ---------------------------------------------------------------------------
+
+def _cnn(explicit: bool) -> Graph:
+    """Small conv chain (the CNN corner of the zoo)."""
+    kw = dict(traffic_scale=1.0, weight_traffic_scale=1.0) if explicit else {}
+    g = Graph("cnn-t")
+    g.add(Layer(name="c1", kind="conv", K=16, H=16, W=16, C=3, R=3, S=3,
+                **kw), ())
+    g.add(Layer(name="c2", kind="conv", K=32, H=8, W=8, C=16, R=3, S=3,
+                stride=2, **kw), [("c1", 1.0)] if explicit else ["c1"])
+    g.add(Layer(name="p", kind="pool", K=32, H=4, W=4, C=32, stride=2, **kw),
+          [("c2", 1.0)] if explicit else ["c2"])
+    g.add(Layer(name="fc", kind="fc", K=10, H=1, W=1, C=512, **kw),
+          [("p", 1.0)] if explicit else ["p"])
+    g.validate()
+    return g
+
+
+_M2_CFG = ModelConfig(name="m2-t", family="ssm", n_layers=1, d_model=64,
+                      n_heads=2, n_kv=1, d_ff=0, vocab=64, ssm_state=16,
+                      ssm_headdim=32, ssm_chunk=32)
+
+
+def _zoo(which: str, explicit: bool) -> Graph:
+    if which == "cnn":
+        return _cnn(explicit)
+    if which == "transformer":
+        g = transformer(n_layers=1, d_model=64, d_ff=128, seq=32, name="tf-t")
+    else:                                        # mamba2 (SSD block)
+        g = lm_graph(_M2_CFG, seq=64)
+    if explicit:
+        # force the guarded code paths: explicit 1.0 scales on every layer
+        # and a stored 1.0 multiplicity on every edge — both must be
+        # no-ops down to the last bit
+        g2 = Graph(g.name)
+        g2.layers = {n: replace(l, traffic_scale=1.0,
+                                weight_traffic_scale=1.0)
+                     for n, l in g.layers.items()}
+        g2.edges = list(g.edges)
+        g2.edge_mults = {e: 1.0 for e in g.edges}
+        g2.input_layers = list(g.input_layers)
+        g2.validate()
+        return g2
+    return g
+
+
+@SET
+@given(which=st.sampled_from(["cnn", "transformer", "mamba2"]),
+       glb_kb=st.sampled_from([256, 1024]),
+       batch=st.sampled_from([2, 4]))
+def test_all_one_scales_bit_identical_scalar_and_batched(which, glb_kb,
+                                                         batch):
+    """Explicit 1.0 scales/mults == defaults, scalar AND batched rows."""
+    arch = _arch(glb_kb)
+    g0 = _zoo(which, explicit=False)
+    g1 = _zoo(which, explicit=True)
+    assert not g0.is_scaled
+    assert dense_twin(g0) is g0              # identity, not a copy
+    groups = partition_graph(g0, arch, batch)
+    assert partition_graph(g1, arch, batch) == groups
+    m0 = tangram_map(groups, g0, arch)
+    m1 = tangram_map(groups, g1, arch)
+    ev0, ev1 = Evaluator(arch, g0), Evaluator(arch, g1)
+    for (grp, lms0), (_, lms1) in zip(m0, m1):
+        assert lms0 == lms1
+        ge0, an0 = ev0.eval_group(grp, lms0, batch)
+        ge1, an1 = ev1.eval_group(grp, lms1, batch)
+        assert (ge0.energy_j, ge0.delay_s) == (ge1.energy_j, ge1.delay_s)
+        assert ge0.energy_breakdown == ge1.energy_breakdown
+        assert np.array_equal(an0.edge_bytes, an1.edge_bytes)
+    reqs0 = [(grp, lms) for grp, lms in m0]
+    reqs1 = [(grp, lms) for grp, lms in m1]
+    rows0 = ev0.eval_requests_batch(reqs0, batch)
+    rows1 = ev1.eval_requests_batch(reqs1, batch)
+    for (ge0, an0), (ge1, an1) in zip(rows0, rows1):
+        assert (ge0.energy_j, ge0.delay_s) == (ge1.energy_j, ge1.delay_s)
+        assert np.array_equal(an0.edge_bytes, an1.edge_bytes)
+
+
+@SET
+@given(n=st.integers(1, 5), seed=st.integers(0, 10_000))
+def test_uniform_weights_reduce_bit_identical(n, seed):
+    """Explicit all-1.0 weights == weightless reduction, to the last bit."""
+    rng = np.random.default_rng(seed)
+    trs = {f"w{i}": TaskResult(energy_j=float(rng.uniform(1e-6, 1e-1)),
+                               delay_s=float(rng.uniform(1e-6, 1e-1)))
+           for i in range(n)}
+    arch = _arch()
+    cfg0 = DSEConfig(sa=SAConfig(iters=10, seed=0))
+    cfg1 = replace(cfg0, workload_weights={k: 1.0 for k in trs})
+    p0 = reduce_tasks(arch, cfg0, trs)
+    p1 = reduce_tasks(arch, cfg1, trs)
+    assert (p0.energy_j, p0.delay_s, p0.objective) \
+        == (p1.energy_j, p1.delay_s, p1.objective)
+
+
+def test_weighted_reduce_math_and_validation():
+    arch = _arch()
+    trs = {"A": TaskResult(1e-3, 2e-3), "B": TaskResult(3e-3, 4e-3)}
+    cfg = DSEConfig(workload_weights={"A": 3.0, "B": 1.0})
+    p = reduce_tasks(arch, cfg, trs)
+    assert p.energy_j == pytest.approx(
+        math.exp((3 * math.log(1e-3) + math.log(3e-3)) / 4), rel=1e-12)
+    assert p.delay_s == pytest.approx(
+        math.exp((3 * math.log(2e-3) + math.log(4e-3)) / 4), rel=1e-12)
+    with pytest.raises(ValueError, match="positive"):
+        reduce_tasks(arch, DSEConfig(workload_weights={"A": 0.0}), trs)
+    with pytest.raises(ValueError, match="positive"):
+        reduce_tasks(arch, DSEConfig(workload_weights={"A": -2.0}), trs)
+
+
+# ---------------------------------------------------------------------------
+# expected-traffic IR semantics
+# ---------------------------------------------------------------------------
+
+def test_scale_validation_and_edge_mults():
+    with pytest.raises(ValueError):
+        Layer(name="x", kind="fc", K=8, H=8, C=8, traffic_scale=0.0)
+    with pytest.raises(ValueError):
+        Layer(name="x", kind="fc", K=8, H=8, C=8, weight_traffic_scale=-1.0)
+    g = Graph("t")
+    g.add(Layer(name="a", kind="fc", K=8, H=8, C=8), ())
+    with pytest.raises(ValueError):
+        g.add(Layer(name="b", kind="fc", K=8, H=8, C=8), [("a", 0.0)])
+    g.add(Layer(name="b", kind="fc", K=8, H=8, C=8), [("a", 0.25)])
+    assert g.edge_mult("a", "b") == 0.25
+    assert g.edge_mult("missing", "b") == 1.0
+    a = g.layers["a"]
+    assert edge_volume(g, "a", "b", 2) == a.ofmap_bytes(2) * 0.25
+
+
+def test_expected_volumes_scale():
+    l = Layer(name="e", kind="fc", K=64, H=32, C=64, traffic_scale=0.25,
+              weight_traffic_scale=0.5)
+    assert l.expected_macs(2) == l.macs(2) * 0.25
+    assert l.expected_ofmap_bytes(2) == l.ofmap_bytes(2) * 0.25
+    assert l.expected_weight_bytes() == l.weight_bytes() * 0.5
+    assert l.is_scaled
+    d = Layer(name="d", kind="fc", K=64, H=32, C=64)
+    assert d.expected_macs(2) == d.macs(2)      # exact int, no float pass
+    assert isinstance(d.expected_macs(2), int)
+
+
+def test_analyzer_traffic_scales_linearly():
+    """Halving traffic_scale halves a layer's compute/DRAM contributions."""
+    arch = _arch()
+
+    def _pair(scale):
+        g = Graph(f"s{scale}")
+        g.add(Layer(name="a", kind="fc", K=64, H=32, C=64), ())
+        g.add(Layer(name="b", kind="fc", K=64, H=32, C=64,
+                    traffic_scale=scale), [("a", scale)])
+        g.validate()
+        return g
+
+    res = {}
+    for s in (1.0, 0.5):
+        g = _pair(s)
+        groups = partition_graph(g, arch, 2)
+        ev = Evaluator(arch, g)
+        r = ev.evaluate(tangram_map(groups, g, arch), 2)
+        res[s] = r
+    # energy strictly decreases with the expected-traffic share, and the
+    # MoE-style scaled graph stays finite/positive
+    assert 0 < res[0.5].energy_j < res[1.0].energy_j
+    assert 0 < res[0.5].delay_s <= res[1.0].delay_s
+
+
+# ---------------------------------------------------------------------------
+# MoE / MLA graphs
+# ---------------------------------------------------------------------------
+
+def test_moe_vs_moe_dense_relative_traffic():
+    """The routed graph's expected MACs match the legacy dense-width
+    collapse (family="moe-dense") to within 10% — the router gate is the
+    only genuinely new work — while exposing n_experts real branches."""
+    cfg = _M2_CFG.replace(name="moe-t", family="moe", d_ff=128, n_experts=8,
+                          top_k=2, ssm_state=0)
+    gm = lm_graph(cfg, seq=128, n_layers=1)
+    gd = lm_graph(cfg.replace(family="moe-dense"), seq=128, n_layers=1)
+    assert gm.is_scaled and not gd.is_scaled
+    ratio = gm.total_expected_macs() / gd.total_expected_macs()
+    assert 1.0 <= ratio < 1.10          # router overhead only
+    # structure: E expert branches with dense-resident weights
+    ups = [n for n in gm.layers if n.endswith("_up") and "_e" in n]
+    assert len(ups) == cfg.n_experts
+    up = gm.layers[ups[0]]
+    assert up.traffic_scale == pytest.approx(cfg.top_k / cfg.n_experts)
+    assert up.weight_traffic_scale == 1.0
+    # weight capacity: the routed graph keeps ALL experts resident
+    wm = sum(l.expected_weight_bytes() for l in gm.layers.values())
+    wd = sum(l.expected_weight_bytes() for l in gd.layers.values())
+    assert wm / wd > 2.0                 # n_experts/top_k = 4x on the FFN
+
+
+def test_moe_builder_structure():
+    g = moe_transformer(n_layers=1, d_model=64, d_ff=64, n_experts=4,
+                        top_k=2, n_shared=1, seq=32, name="m")
+    g.validate()
+    comb = g.layers["l0_combine"]
+    assert comb.n_inputs == 2 + 1 + 1            # top_k + shared + residual
+    assert len([s for s, d in g.edges if d == "l0_combine"]) == 4 + 1 + 1
+    assert g.edge_mult("l0_add1", "l0_e0_up") == pytest.approx(0.5)
+    with pytest.raises(ValueError, match="top_k"):
+        moe_transformer(n_experts=2, top_k=3)
+
+
+def test_mla_builder_structure():
+    g = mla_transformer(n_layers=1, d_model=64, n_heads=2, q_rank=16,
+                        kv_rank=8, d_ff=64, seq=32, name="mla-t")
+    g.validate()
+    assert not g.is_scaled                       # MLA is dense, just thin
+    kv = g.layers["l0_kvdown"]
+    assert kv.K == 8                             # the latent KV cube
+    assert set(g.succs("l0_kvdown")) == {"l0_kup", "l0_vup"}
+    dsk = mla_transformer(n_layers=1, d_model=64, n_heads=2, seq=32,
+                          moe_ffn=True, n_experts=4, top_k=2)
+    assert dsk.is_scaled                         # DeepSeek-shaped variant
+
+
+def test_workload_registry():
+    for name in ("tf-quick", "moe-quick", "mla-quick"):
+        g = make_workload(name)
+        assert isinstance(g, Graph) and len(g.layers) > 0
+    assert set(WORKLOAD_SPECS) >= {"tf-quick", "tf-paper", "moe-quick",
+                                   "moe-paper", "mla-quick", "mla-paper"}
+    g = make_workload("moe:n_layers=1,d_model=64,d_ff=64,n_experts=4,"
+                      "top_k=1,seq=32,name=m")
+    assert g.is_scaled
+    with pytest.raises(ValueError, match="registered presets"):
+        make_workload("no-such-workload")
+    # realize's graph_from_spec is the same registry
+    from repro.realize.plan import graph_from_spec
+    assert graph_fingerprint(graph_from_spec("moe-quick")) \
+        == graph_fingerprint(make_workload("moe-quick"))
+
+
+def test_fingerprints_dense_stable_scaled_distinct():
+    tf = transformer(n_layers=1, d_model=64, d_ff=128, seq=32, name="t")
+    assert graph_fingerprint(tf) == graph_fingerprint(
+        transformer(n_layers=1, d_model=64, d_ff=128, seq=32, name="t"))
+    moe = WORKLOAD_SPECS["moe-quick"]()
+    twin = dense_twin(moe)
+    assert graph_fingerprint(moe) != graph_fingerprint(twin)
+    # same structure at a different routing fraction must re-fingerprint
+    a = moe_transformer(n_layers=1, d_model=64, d_ff=64, n_experts=4,
+                        top_k=1, n_shared=0, seq=32)
+    b = moe_transformer(n_layers=1, d_model=64, d_ff=64, n_experts=4,
+                        top_k=2, n_shared=0, seq=32)
+    # top_k changes combine n_inputs AND scales; isolate the scales via
+    # the twin (identical dense cubes except combine) — the scaled graphs
+    # must still differ
+    assert graph_fingerprint(a) != graph_fingerprint(b)
+
+
+# ---------------------------------------------------------------------------
+# portfolio quick flow: screen -> SA -> checkpoint -> shard/merge -> realize
+# ---------------------------------------------------------------------------
+
+def test_portfolio_quick_flow(tmp_path):
+    """MoE + MLA + dense through the weighted Table-I quick flow:
+    checkpointed weighted sweep, 2-way shard + merge bit-identity, and
+    plan-level realization of the winner's mappings."""
+    from repro.core.bridge import lms_to_plan
+    from repro.core.dse import grid_candidates
+    from repro.realize.plan import (checkpoint_workload_fingerprints,
+                                    load_realize_candidates, validate_plan)
+
+    cands = grid_candidates(
+        72.0, mac_options=(512,), cut_options=(1, 2), dram_per_tops=(2.0,),
+        noc_options=(32,), d2d_ratio=(0.5,), glb_options=(1024,))[:2]
+    assert len(cands) == 2
+    wls = {"TF": transformer(n_layers=1, d_model=64, d_ff=128, seq=32,
+                             name="tf-t"),
+           "MOE": moe_transformer(n_layers=1, d_model=64, d_ff=64,
+                                  n_experts=4, top_k=2, n_shared=0, seq=32,
+                                  name="moe-t"),
+           "MLA": mla_transformer(n_layers=1, d_model=64, n_heads=2,
+                                  q_rank=16, kv_rank=8, d_ff=64, seq=32,
+                                  name="mla-t")}
+    cfg = DSEConfig(batch=4, sa=SAConfig(iters=60, seed=0),
+                    keep_mappings=True,
+                    workload_weights={"TF": 0.6, "MOE": 0.25, "MLA": 0.15})
+    ck = tmp_path / "portfolio.ckpt.jsonl"
+    pts = run_dse(cands, wls, cfg, screen_keep=1.0, checkpoint=ck)
+    assert len(pts) == 2 and pts[0].objective <= pts[1].objective
+    assert set(pts[0].per_workload) == {"TF", "MOE", "MLA"}
+    # header carries the weights (before :wl=, so realize still parses it)
+    header = json.loads(ck.read_text().splitlines()[0])["_config"]
+    assert ":w=MLA:0.15,MOE:0.25,TF:0.6:" in header
+    fps = checkpoint_workload_fingerprints(ck)
+    assert set(fps) == {"TF", "MOE", "MLA"}
+    # sharded portfolio sweep merges bit-identically
+    shards = []
+    for i in range(2):
+        sck = tmp_path / f"shard{i}.jsonl"
+        run_dse(cands, wls, cfg, shard=(i, 2), checkpoint=sck)
+        shards.append(sck)
+    merged = tmp_path / "merged.jsonl"
+    merge_checkpoints(shards, merged)
+    re_pts = run_dse(cands, wls, cfg, checkpoint=merged)
+    assert [p.objective for p in re_pts] == [p.objective for p in pts]
+    # realize (plan level): every checkpointed mapping lowers + validates,
+    # including the scaled MoE graph's
+    rcs = load_realize_candidates(ck, wls, verbose=False)
+    assert {c.workload for c in rcs} == {"TF", "MOE", "MLA"}
+    for c in rcs:
+        plan = c.lower()
+        validate_plan(plan, n_devices=c.arch.n_cores, arch=c.arch)
+
+
+def test_engine_rejects_unknown_weight_names():
+    wls = {"TF": transformer(n_layers=1, d_model=64, d_ff=128, seq=32,
+                             name="t")}
+    with pytest.raises(ValueError, match="TYPO"):
+        ExplorationEngine(wls, DSEConfig(workload_weights={"TYPO": 1.0}))
+
+
+def test_moe_realize_measured_scaling():
+    """The dense-equivalent MoE program measures with expected-traffic
+    factors applied (subprocess: forced host devices)."""
+    code = textwrap.dedent("""
+        import json
+        from repro.core.bridge import lms_to_plan
+        from repro.core.graph_partition import partition_graph
+        from repro.core.hw import ArchConfig
+        from repro.core.tangram import tangram_map
+        from repro.core.workloads import moe_transformer
+        from repro.realize.measure import measure_candidate
+        from repro.realize.plan import RealizeCandidate
+        from repro.realize.program import build_program
+
+        arch = ArchConfig(x_cores=4, y_cores=3, xcut=2, ycut=1, noc_bw=32,
+                          d2d_bw=16, dram_bw=64, glb_kb=1024,
+                          macs_per_core=1024)
+        g = moe_transformer(n_layers=1, d_model=64, d_ff=64, n_experts=4,
+                            top_k=2, n_shared=0, seq=32, name="moe-rz")
+        groups = partition_graph(g, arch, 2)
+        mapping = tangram_map(groups, g, arch)
+        plan = lms_to_plan(mapping)
+        prog = build_program(g, plan, use_pallas=False)
+        prog.compile_all()
+        cand = RealizeCandidate(key="k", workload="MOE", arch=arch,
+                                mapping=mapping, graph=g, energy_j=1.0,
+                                delay_s=1.0)
+        rep = measure_candidate(cand, prog, execute=True)
+        out = {
+            "ratios": rep.ratio_summary(),
+            "scales": [s.expected_scale for s in rep.stages],
+            "record_has_scale": any("expected_scale" in s.to_record()
+                                    for s in rep.stages),
+        }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    data = json.loads(out.stdout.splitlines()[-1])
+    assert all(v > 0 for v in data["ratios"].values())
+    assert data["record_has_scale"]
+    # every stage carries factors; expert stages carry sub-1.0 ones
+    assert all(data["scales"])
+    assert any(f < 1.0 for sc in data["scales"] for f in sc.values())
