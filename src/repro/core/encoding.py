@@ -171,6 +171,60 @@ class LMSBatch:
     def n_layers(self) -> int:
         return len(self.names)
 
+    def routing_tables(self) -> "RoutingTables":
+        """Padded per-layer routing tables of this batch (memoized).
+
+        Rectangularizes the ragged CG geometry so batched construction can
+        gather core bindings without per-row Python: every table is a dense
+        int/bool array over ``(B, L, Cmax)`` whose pad cells are routed to a
+        *safe* real value (slot 0 / the row's last real core) and flagged
+        off in ``slot_mask`` — the same trick the analyzer's packed
+        multicast bitsets use (inactive members redirect to the empty
+        ``(p, p)`` diagonal).  Consumers mask or slice by ``cg_len``;
+        gathering through a pad cell is always in-bounds and never
+        contributes.
+        """
+        try:
+            return self._routes                      # type: ignore[attr-defined]
+        except AttributeError:
+            pass
+        cg, cg_len = self.cg, self.cg_len
+        B, L, cmax = cg.shape
+        slot_mask = cg >= 0                          # (B, L, Cmax)
+        cg_safe = np.where(slot_mask, cg, 0)
+        # stable argsort over (real cores ascending, pads last): CG rows
+        # hold distinct core ids, so this equals the analyzer's
+        # np.argsort(cores) permutation on the valid prefix
+        key = np.where(slot_mask, cg, np.iinfo(np.int64).max)
+        order = np.argsort(key, axis=2, kind="stable")
+        cg_sorted = np.take_along_axis(cg, order, axis=2)
+        # pad slots -> the row's LAST real core (every row has >= 1 core:
+        # Part products are >= 1), so sorted-order gathers stay in-bounds
+        last = np.take_along_axis(
+            cg_sorted, np.maximum(cg_len - 1, 0)[..., None], axis=2)
+        cg_sorted = np.where(np.take_along_axis(slot_mask, order, axis=2),
+                             cg_sorted, last)
+        rt = RoutingTables(slot_mask=slot_mask, cg_safe=cg_safe,
+                           order=order, cg_sorted=cg_sorted)
+        object.__setattr__(self, "_routes", rt)
+        return rt
+
+
+@dataclass(frozen=True)
+class RoutingTables:
+    """Rectangular core-binding tables of one :class:`LMSBatch`.
+
+    All arrays are ``(B, L, Cmax)``; see :meth:`LMSBatch.routing_tables`
+    for the padding contract.  ``order`` maps correspondence order to
+    sorted-core order per (mapping, layer) row — pad slots sort last, real
+    slots reproduce ``np.argsort`` of the valid CG prefix exactly (core
+    ids within a row are distinct, so the permutation is unique).
+    """
+    slot_mask: np.ndarray         # bool — True where the CG slot is real
+    cg_safe: np.ndarray           # int64 — CG with pads replaced by 0
+    order: np.ndarray             # int64 — correspondence -> sorted perm
+    cg_sorted: np.ndarray         # int64 — cores ascending, pads = last core
+
 
 def pack_lms_batch(lms_list: Sequence[LMS],
                    names: Optional[Sequence[str]] = None) -> LMSBatch:

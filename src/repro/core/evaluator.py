@@ -79,6 +79,91 @@ class EvalResult:
         return (self.energy_j ** beta) * (self.delay_s ** gamma)
 
 
+def _build_fused_fn(layout: Sequence[Tuple[int, int]], buf_len: int,
+                    noc_mask: np.ndarray, d2d_mask: np.ndarray,
+                    has_d2d: bool, arch: ArchConfig):
+    """Compile the fused construct->replay->eval pass for one evaluator.
+
+    Returns a jitted function ``(B, idx, vals, n_passes, depth,
+    weight_totals) -> (delay, energy, stage, overflow, bottleneck_idx,
+    energy_parts)`` where ``idx``/``vals`` are the batch's concatenated
+    int32/float32 contribution streams (pad entries aimed at the
+    ``B * buf_len`` dump cell).  The segment-sum replay and the whole
+    delay/energy pipeline run inside ONE jit, so an accelerator sees a
+    single fused kernel instead of a bincount plus a dozen NumPy ops.
+
+    Float32 + unordered segment reduction make this parity-grade
+    (~1e-4 relative), never bit-identical — the exact NumPy engine stays
+    the default and re-scores every winner (DESIGN.md).
+    """
+    from functools import partial
+
+    import jax
+    import jax.numpy as jnp
+
+    tech = arch.tech
+    noc_m = jnp.asarray(noc_mask, dtype=jnp.float32)
+    d2d_m = jnp.asarray(d2d_mask, dtype=jnp.float32)
+    noc_bw = arch.noc_bw * 1e9
+    d2d_bw = arch.d2d_bw * 1e9
+    dram_bw = arch.dram_bw * 1e9
+    dram_port_bw = arch.dram_bw / arch.n_dram * 1e9
+    glb_cap = float(arch.core_glb_bytes)
+    n_cores = arch.n_cores
+    spans = tuple((int(lo), int(hi)) for lo, hi in layout)
+
+    @partial(jax.jit, static_argnums=(0,))
+    def fused(B, idx, vals, n_passes, depth, weight_totals):
+        buf = jax.ops.segment_sum(vals, idx, num_segments=B * buf_len + 1)
+        buf = buf[:-1].reshape(B, buf_len)
+
+        def tgt(t):
+            lo, hi = spans[t]
+            return buf[:, lo:hi]
+
+        core_time = tgt(T_CORE_TIME)
+        glb_rw = tgt(T_GLB_RW)
+        edge_tot = tgt(T_EDGE) + tgt(T_EDGE_AM)
+        edge_noc = edge_tot * noc_m
+        edge_d2d = edge_tot * d2d_m
+        t_noc = edge_noc.max(axis=1, initial=0.0) / noc_bw
+        if has_d2d:
+            t_d2d = edge_d2d.max(axis=1, initial=0.0) / d2d_bw
+        else:
+            t_d2d = jnp.zeros_like(t_noc)
+        dram_tot = tgt(T_DRAM) + tgt(T_DRAM_AM)
+        t_dram = dram_tot.max(axis=1, initial=0.0) / dram_port_bw
+        t_comp = core_time.max(axis=1, initial=0.0)
+        times = jnp.stack([t_comp, t_noc, t_d2d, t_dram])
+        stage = jnp.maximum(times.max(axis=0), 1e-12)
+        b_idx = jnp.argmax(times, axis=0)
+
+        over = jnp.maximum(tgt(T_GLB) - glb_cap, 0.0)
+        overflow = over.sum(axis=1)
+        spill = overflow * 2.0
+        stage = stage * (1.0 + overflow / (glb_cap * n_cores))
+        stage = stage + spill / dram_bw
+        np_f = n_passes.astype(jnp.float32)
+        delay = stage * (np_f + depth.astype(jnp.float32) - 1.0)
+
+        noc_bytes = edge_noc.sum(axis=1) * np_f
+        d2d_bytes = edge_d2d.sum(axis=1) * np_f
+        dram_b = tgt(T_DRAM).sum(axis=1) * np_f + weight_totals \
+            + spill * np_f
+        macs = tgt(T_CORE_MACS).sum(axis=1) * np_f
+        e_mac = macs * tech.e_mac
+        e_glb = (glb_rw[:, 0] + glb_rw[:, 1] + tgt(T_CORE_IN).sum(axis=1)) \
+            * np_f * tech.e_glb_byte
+        e_noc = (noc_bytes + d2d_bytes) * tech.e_noc_hop_byte
+        e_d2d = d2d_bytes * tech.e_d2d_byte
+        e_dram = dram_b * tech.e_dram_byte
+        energy = e_mac + e_glb + e_noc + e_d2d + e_dram
+        return (delay, energy, stage, overflow, b_idx,
+                jnp.stack([e_mac, e_glb, e_noc, e_d2d, e_dram]))
+
+    return fused
+
+
 def _pipeline_depth(g: Graph, group: LayerGroup) -> int:
     """Longest dependency chain within the group (fill/drain passes)."""
     names = set(group.names)
@@ -108,6 +193,7 @@ class Evaluator:
         self._noc_idx = np.flatnonzero(self._not_d2d)
         self._d2d_idx = np.flatnonzero(self._is_d2d)
         self._depth_cache: Dict[Tuple[str, ...], int] = {}
+        self._fused_fn = None            # built on first backend="jax" use
 
     # ------------------------------------------------------------------
     def _group_depth(self, group: LayerGroup) -> int:
@@ -182,20 +268,31 @@ class Evaluator:
 
     # ------------------------------------------------------------------
     def eval_requests_batch(self, requests: Sequence[Tuple[LayerGroup, LMS]],
-                            total_batch: int
+                            total_batch: int, backend: str = "numpy"
                             ) -> List[Tuple[GroupEval, GroupAnalysis]]:
         """Evaluate a mixed batch of (group, lms) requests in ONE pass.
 
-        Row ``b`` is bit-identical to ``eval_group(*requests[b],
-        total_batch)``: the batched analyzer replays every request's
-        contribution stream in the scalar order (disjoint buffer rows, one
-        ``np.bincount``), and the delay/energy math below mirrors the
-        scalar path operation for operation along a leading batch axis —
-        masked 2-D row reductions see the same elements in the same order
-        as the scalar 1-D reductions, so pairwise summation blocks
-        identically, and the per-row ``n_passes``/``depth`` constants
-        enter elementwise exactly where the scalar ints did.
+        With the default ``backend="numpy"``, row ``b`` is bit-identical
+        to ``eval_group(*requests[b], total_batch)``: the batched analyzer
+        replays every request's contribution stream in the scalar order
+        (disjoint buffer rows, one ``np.bincount``), and the delay/energy
+        math below mirrors the scalar path operation for operation along a
+        leading batch axis — masked 2-D row reductions see the same
+        elements in the same order as the scalar 1-D reductions, so
+        pairwise summation blocks identically, and the per-row
+        ``n_passes``/``depth`` constants enter elementwise exactly where
+        the scalar ints did.
+
+        ``backend="jax"`` instead runs the opt-in FUSED pass: batched
+        construction feeds one jitted segment-sum replay + delay/energy
+        kernel (float32, ~1e-4 parity envelope, analyses are ``None`` in
+        the returned tuples).  Winners must be re-scored by the exact
+        engine — see DESIGN.md's fused-pass contract.
         """
+        if backend == "jax":
+            return self._eval_requests_fused(requests, total_batch)
+        if backend != "numpy":
+            raise ValueError(f"unknown eval batch backend {backend!r}")
         arch, tech = self.arch, self.arch.tech
         ab = self.analyzer.analyze_requests(requests, total_batch)
         n_passes = np.array([max(1, -(-total_batch // grp.batch_unit))
@@ -261,18 +358,88 @@ class Evaluator:
             out.append((ge, an))
         return out
 
+    def _eval_requests_fused(self, requests: Sequence[Tuple[LayerGroup, LMS]],
+                             total_batch: int
+                             ) -> List[Tuple[GroupEval, GroupAnalysis]]:
+        """The fused construct->replay->eval pass (``backend="jax"``).
+
+        Construction is the same batched engine the exact path uses
+        (``_prefetch_contribs`` + cached ``row_stream`` downcasts); the
+        replay and the entire delay/energy pipeline then run as ONE jitted
+        kernel.  Streams are padded to power-of-two lengths (pad entries
+        scatter into a dump cell past the last row) so jit retraces stay
+        rare and shapes stabilize quickly under SA stepping.
+
+        Returns ``(GroupEval, None)`` tuples: the fused path never
+        materializes per-row :class:`GroupAnalysis` views.  Results carry
+        a ~1e-4 relative envelope vs the exact engine (float32 math,
+        unordered segment reduction) — winners must be re-scored exactly.
+        """
+        if not requests:
+            return []
+        an = self.analyzer
+        an._prefetch_contribs(requests, total_batch)
+        B = len(requests)
+        buf_len = an._buf_len
+        idx_parts: List[np.ndarray] = []
+        val_parts: List[np.ndarray] = []
+        wts = np.empty(B, dtype=np.float32)
+        npass = np.empty(B, dtype=np.int32)
+        dep = np.empty(B, dtype=np.int32)
+        for b, (grp, lms) in enumerate(requests):
+            i, v, wt = an.row_stream(grp, lms, total_batch)
+            idx_parts.append(i + np.int32(b * buf_len) if b else i)
+            val_parts.append(v)
+            wts[b] = wt
+            npass[b] = max(1, -(-total_batch // grp.batch_unit))
+            dep[b] = self._group_depth(grp)
+        idx = np.concatenate(idx_parts)
+        vals = np.concatenate(val_parts)
+        n = idx.size
+        n_pad = 1 << max(4, (max(n, 1) - 1).bit_length())
+        if n_pad != n:
+            dump = np.int32(B * buf_len)
+            idx = np.concatenate([idx, np.full(n_pad - n, dump, np.int32)])
+            vals = np.concatenate([vals, np.zeros(n_pad - n, np.float32)])
+        if self._fused_fn is None:
+            self._fused_fn = _build_fused_fn(
+                an._layout, buf_len, self._not_d2d, self._is_d2d,
+                self._has_d2d, self.arch)
+        delay, energy, stage, overflow, b_idx, eparts = \
+            self._fused_fn(B, idx, vals, npass, dep, wts)
+        delay = np.asarray(delay)
+        energy = np.asarray(energy)
+        stage = np.asarray(stage)
+        overflow = np.asarray(overflow)
+        b_idx = np.asarray(b_idx)
+        eparts = np.asarray(eparts)
+        names = ("compute", "noc", "d2d", "dram")
+        ekeys = ("mac", "glb", "noc", "d2d", "dram")
+        out: List[Tuple[GroupEval, GroupAnalysis]] = []
+        for b in range(B):
+            ge = GroupEval(
+                delay_s=float(delay[b]), energy_j=float(energy[b]),
+                stage_time_s=float(stage[b]), n_passes=int(npass[b]),
+                depth=int(dep[b]), bottleneck=names[int(b_idx[b])],
+                glb_overflow_bytes=float(overflow[b]),
+                energy_breakdown={k: float(eparts[j, b])
+                                  for j, k in enumerate(ekeys)})
+            out.append((ge, None))
+        return out
+
     def eval_group_batch(self, group: LayerGroup, lms_list: Sequence[LMS],
-                         total_batch: int
+                         total_batch: int, backend: str = "numpy"
                          ) -> List[Tuple[GroupEval, GroupAnalysis]]:
         """Evaluate B mappings of ONE group in a single vectorized pass
         (:meth:`eval_requests_batch` with a constant group); row ``b`` is
-        bit-identical to ``eval_group(group, lms_list[b], total_batch)``."""
+        bit-identical to ``eval_group(group, lms_list[b], total_batch)``
+        on the default backend."""
         return self.eval_requests_batch([(group, lms) for lms in lms_list],
-                                        total_batch)
+                                        total_batch, backend=backend)
 
     # ------------------------------------------------------------------
     def eval_groups_batched(self, requests: Sequence[Tuple[LayerGroup, LMS]],
-                            total_batch: int
+                            total_batch: int, backend: str = "numpy"
                             ) -> List[Tuple[GroupEval, GroupAnalysis]]:
         """Evaluate a mixed batch of (group, lms) requests.
 
@@ -280,7 +447,8 @@ class Evaluator:
         :meth:`eval_requests_batch` pass (layer groups may mix — the
         accumulator layout is per-arch).  Results are returned in request
         order and are bit-identical to per-request :meth:`eval_group`
-        calls.
+        calls on the default backend; ``backend="jax"`` routes through the
+        fused parity-grade pass instead.
         """
         keyed = [(grp.names, grp.batch_unit, lms.cache_key())
                  for grp, lms in requests]
@@ -290,7 +458,8 @@ class Evaluator:
                 distinct[key] = req
         results = dict(zip(distinct,
                            self.eval_requests_batch(list(distinct.values()),
-                                                    total_batch)))
+                                                    total_batch,
+                                                    backend=backend)))
         return [results[key] for key in keyed]
 
     # ------------------------------------------------------------------
@@ -410,6 +579,10 @@ class CachedEvaluator(Evaluator):
         self.misses = 0
         self._cache: "OrderedDict[Tuple, Tuple[GroupEval, GroupAnalysis]]" \
             = OrderedDict()
+        # fused (backend="jax") results live in their OWN cache: they are
+        # parity-grade, so they must never satisfy an exact-path lookup
+        self._fused_cache: "OrderedDict[Tuple, Tuple[GroupEval, None]]" \
+            = OrderedDict()
 
     def eval_group(self, group: LayerGroup, lms: LMS,
                    total_batch: int) -> Tuple[GroupEval, GroupAnalysis]:
@@ -427,12 +600,15 @@ class CachedEvaluator(Evaluator):
         return out
 
     def eval_groups_batched(self, requests: Sequence[Tuple[LayerGroup, LMS]],
-                            total_batch: int
+                            total_batch: int, backend: str = "numpy"
                             ) -> List[Tuple[GroupEval, GroupAnalysis]]:
         """Cache-aware batch: hits resolve from the content cache, misses
         run through the vectorized batch path and are inserted exactly as
         :meth:`eval_group` would insert them (bit-identical values), so
-        interleaving batched and scalar calls can never diverge."""
+        interleaving batched and scalar calls can never diverge.  Fused
+        (``backend="jax"``) results resolve against a separate cache —
+        parity-grade values never leak into exact-path lookups."""
+        cache = self._fused_cache if backend == "jax" else self._cache
         keys = [(grp.names, grp.batch_unit, lms.cache_key(), total_batch)
                 for grp, lms in requests]
         out: List[Optional[Tuple[GroupEval, GroupAnalysis]]] \
@@ -441,9 +617,9 @@ class CachedEvaluator(Evaluator):
         miss_reqs: List[Tuple[LayerGroup, LMS]] = []
         miss_keys: List[Tuple] = []
         for i, key in enumerate(keys):
-            hit = self._cache.get(key)
+            hit = cache.get(key)
             if hit is not None:
-                self._cache.move_to_end(key)
+                cache.move_to_end(key)
                 self.hits += 1
                 out[i] = hit
             elif key not in fresh:
@@ -456,11 +632,12 @@ class CachedEvaluator(Evaluator):
             self.misses += len(miss_reqs)
             for key, res in zip(miss_keys,
                                 self.eval_requests_batch(miss_reqs,
-                                                         total_batch)):
+                                                         total_batch,
+                                                         backend=backend)):
                 fresh[key] = res
-                self._cache[key] = res
-                if len(self._cache) > self.maxsize:
-                    self._cache.popitem(last=False)
+                cache[key] = res
+                if len(cache) > self.maxsize:
+                    cache.popitem(last=False)
         for i, key in enumerate(keys):
             if out[i] is None:
                 out[i] = fresh[key]

@@ -173,7 +173,7 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
     swap_accepts = [0] * n_pairs
     for it in range(cfg.iters):
         if cfg.lockstep:
-            step_chains_lockstep(chains)
+            step_chains_lockstep(chains, backend=cfg.backend)
         else:
             for chain in chains:
                 chain.step()

@@ -61,6 +61,14 @@ class SAConfig:
     # bit-identical to the scalar one) — False keeps the serial per-chain
     # loop for A/B tests and benchmarks.
     lockstep: bool = True
+    # "numpy" (default) = exact engine, trajectories bit-identical between
+    # lockstep and serial stepping.  "jax" = the fused jitted
+    # construct->replay->eval pass for lockstep proposal scoring: float32
+    # parity-grade (~1e-4), so trajectories may diverge from the exact
+    # engine's — but every chain's BEST mapping is still re-scored by the
+    # exact engine in finalize(), so reported costs are always exact
+    # (the rescore-winners contract, DESIGN.md).
+    backend: str = "numpy"
 
 
 @dataclass
@@ -382,7 +390,8 @@ class SAChain:
                         proposed=self.proposed)
 
 
-def step_chains_lockstep(chains: Sequence[SAChain]) -> None:
+def step_chains_lockstep(chains: Sequence[SAChain],
+                         backend: str = "numpy") -> None:
     """Advance every chain one iteration with ONE batched evaluation.
 
     Phase 1 draws each chain's proposal with its own RNG (same per-chain
@@ -393,6 +402,11 @@ def step_chains_lockstep(chains: Sequence[SAChain]) -> None:
     each consuming only its own chain's RNG.  Because evaluation consumes
     no randomness and the batched evaluator is bit-identical to the scalar
     one, every chain's trajectory equals the serial per-chain loop's.
+
+    ``backend="jax"`` scores the iteration's proposals through the fused
+    jitted construct->replay->eval pass instead: parity-grade float32
+    objectives (trajectories may diverge from the exact engine's), with
+    each chain's best re-scored exactly at finalize().
     """
     props = [ch.propose() for ch in chains]
     live = [(i, p) for i, p in enumerate(props) if p is not None]
@@ -401,7 +415,7 @@ def step_chains_lockstep(chains: Sequence[SAChain]) -> None:
     ev = chains[0].ev
     total_batch = chains[0].total_batch
     results = ev.eval_groups_batched(
-        [(p[1], p[2]) for _, p in live], total_batch)
+        [(p[1], p[2]) for _, p in live], total_batch, backend=backend)
     for (i, (gi, grp, cand, new_idle)), (ge, _) in zip(live, results):
         chains[i].accept(gi, grp, cand, new_idle, ge)
 

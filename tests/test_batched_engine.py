@@ -295,3 +295,55 @@ def test_group_draw_cdf_cached_and_correct(setup):
     assert np.all(np.diff(a) >= 0)
     other = group_draw_cdf(groups, arch.n_cores + 1)
     assert other is not a
+
+
+# ---------------------------------------------------------------------------
+# batched prefetch builders vs pure scalar builders (raw-stream A/B)
+# ---------------------------------------------------------------------------
+
+def test_prefetch_builders_stream_identical_to_scalar():
+    """The batched construction path must seal byte-identical contribution
+    streams, not merely equal replayed sums: compare all ten GroupAnalysis
+    arrays AND the raw flat_idx/flat_vals of every cached piece between a
+    prefetch-primed analyzer and a pure scalar one, across workloads with
+    expert branches (MoE) and plain transformer deps."""
+    from repro.core.analyzer import Analyzer
+    from repro.core.workloads import make_workload
+
+    fields = ("core_macs", "edge_bytes", "edge_bytes_amortized",
+              "dram_bytes", "dram_bytes_amortized", "core_glb_need",
+              "core_in_bytes", "core_out_bytes", "core_time_s",
+              "glb_rw_bytes")
+    arch = _arch()
+    n_pieces = 0
+    for g in (make_workload("moe-quick"), _graph()):
+        groups = partition_graph(g, arch, 8)
+        rng = np.random.default_rng(1234)
+        for group in groups:
+            for _ in range(2):
+                lms = random_lms(group, g, arch.n_cores, arch.n_dram, rng)
+                a = Analyzer(arch, g)            # batched-primed
+                b = Analyzer(arch, g)            # pure scalar
+                a._prefetch_contribs([(group, lms)], 8)
+                ra = a.analyze(group, lms, 8)
+                rb = b.analyze(group, lms, 8)
+                for f in fields:
+                    va, vb = getattr(ra, f), getattr(rb, f)
+                    if va is None and vb is None:
+                        continue
+                    assert np.array_equal(va, vb), f
+                assert ra.weight_dram_bytes_total \
+                    == rb.weight_dram_bytes_total
+                for cache_name in ("_layer_cache", "_dep_cache"):
+                    ca, cb = getattr(a, cache_name), getattr(b, cache_name)
+                    for k in cb:
+                        assert k in ca, (cache_name, k)
+                        pa, pb = ca[k], cb[k]
+                        pa = pa if isinstance(pa, tuple) else (pa,)
+                        pb = pb if isinstance(pb, tuple) else (pb,)
+                        for xa, xb in zip(pa, pb):
+                            assert np.array_equal(xa.flat_idx, xb.flat_idx)
+                            assert np.array_equal(xa.flat_vals, xb.flat_vals)
+                            assert xa.weight_total == xb.weight_total
+                            n_pieces += 1
+    assert n_pieces > 0

@@ -1,0 +1,93 @@
+"""bench_dse/v2 trajectory document: pure projection/migration functions,
+in-place v1 migration on write, append-only history, and the committed
+lockstep-speedup floor check."""
+
+import json
+
+import pytest
+
+from benchmarks.run import (LOCKSTEP_SPEEDUP_FLOOR, check_floor,
+                            make_trajectory_entry, migrate_bench_doc)
+
+
+def _v1_doc():
+    return {
+        "schema": "bench_dse/v1",
+        "grid": "table1 --quick (72 TOPS, 12 candidates)",
+        "screening": {"batched_cands_per_s": 45.0, "batched_s": 0.27},
+        "lockstep_sa": {"serial_iters_per_s": 320.0,
+                        "lockstep_iters_per_s": 360.0,
+                        "fused_iters_per_s": 86.0,
+                        "speedup": 1.125},
+        "sweep_n4": {"wall_s": 2.6},
+        "vs_pr4": {"sa_chain_n4_speedup": 1.53},
+        "provenance": {"cpu_count": 1},
+    }
+
+
+def test_make_trajectory_entry_projects_headline_figures():
+    e = make_trajectory_entry(_v1_doc(), commit="abc1234",
+                              date="2026-08-08T00:00:00Z")
+    assert e["commit"] == "abc1234"
+    assert e["date"] == "2026-08-08T00:00:00Z"
+    assert e["cpus"] == 1
+    assert e["screening_cands_per_s"] == 45.0
+    assert e["serial_iters_per_s"] == 320.0
+    assert e["lockstep_iters_per_s"] == 360.0
+    assert e["fused_iters_per_s"] == 86.0
+    assert e["lockstep_speedup"] == 1.125
+    assert e["sa_chain_n4_speedup_vs_pr4"] == 1.53
+    assert e["sweep_n4_wall_s"] == 2.6
+
+
+def test_make_trajectory_entry_tolerates_missing_sections():
+    e = make_trajectory_entry({}, commit="x", date="d")
+    assert e["cpus"] is None
+    assert e["lockstep_iters_per_s"] is None
+
+
+def test_migrate_v1_wraps_snapshot_as_first_row():
+    doc = migrate_bench_doc(_v1_doc())
+    assert doc["schema"] == "bench_dse/v2"
+    assert len(doc["trajectory"]) == 1
+    row = doc["trajectory"][0]
+    assert row["commit"] == "pre-v2"            # v1 recorded no commit
+    assert row["lockstep_iters_per_s"] == 360.0
+    # snapshot fields survive alongside the trajectory
+    assert doc["lockstep_sa"]["speedup"] == 1.125
+
+
+def test_migrate_v2_passes_through():
+    v2 = migrate_bench_doc(_v1_doc())
+    v2["trajectory"].append(
+        make_trajectory_entry(_v1_doc(), commit="def", date="later"))
+    again = migrate_bench_doc(v2)
+    assert again is v2
+    assert len(again["trajectory"]) == 2        # append-only, no rewrap
+
+
+def test_check_floor_passes_and_fails(tmp_path, capsys):
+    doc = migrate_bench_doc(_v1_doc())
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(doc))
+    check_floor(ok)                             # 1.125 >= floor
+    assert "OK" in capsys.readouterr().out
+    doc["lockstep_sa"]["speedup"] = LOCKSTEP_SPEEDUP_FLOOR - 0.05
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    with pytest.raises(SystemExit, match="below|FAIL"):
+        check_floor(bad)
+
+
+def test_committed_bench_json_is_v2_with_trajectory():
+    """The checked-in BENCH_dse.json must carry the v2 trajectory and
+    container provenance (satellites of the fused-pass PR)."""
+    from pathlib import Path
+    path = Path(__file__).resolve().parent.parent / "BENCH_dse.json"
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == "bench_dse/v2"
+    assert doc["trajectory"], "append-only trajectory must be non-empty"
+    assert {"commit", "date", "cpus"} <= set(doc["trajectory"][-1])
+    prov = doc["provenance"]
+    assert prov["cpu_count"] >= 1
+    assert prov["jax"]

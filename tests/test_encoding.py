@@ -106,3 +106,57 @@ def test_fd_structural_rules():
     })
     with pytest.raises(ValueError):
         bad.validate(grp, g, n_cores=6, n_dram=2)
+
+
+# ---------------------------------------------------------------------------
+# routing tables (rectangularized CG geometry for batched construction)
+# ---------------------------------------------------------------------------
+
+def _routing_batch(seed=7, n=6):
+    from repro.core.graph_partition import partition_graph
+    from repro.core.hw import ArchConfig
+    from repro.core.workloads import transformer
+
+    arch = ArchConfig(x_cores=4, y_cores=3, xcut=2, ycut=1,
+                      noc_bw=16.0, d2d_bw=8.0, dram_bw=64.0,
+                      glb_kb=512, macs_per_core=256)
+    g = transformer(n_layers=1, d_model=64, d_ff=128, seq=32, name="tf-rt")
+    grp = partition_graph(g, arch, 8)[0]
+    rng = np.random.default_rng(seed)
+    lms_list = [random_lms(grp, g, arch.n_cores, arch.n_dram, rng)
+                for _ in range(n)]
+    from repro.core.encoding import pack_lms_batch
+    return pack_lms_batch(lms_list, names=grp.names), lms_list
+
+
+def test_routing_tables_invariants():
+    batch, lms_list = _routing_batch()
+    rt = batch.routing_tables()
+    B, L, cmax = batch.cg.shape
+    for arr in (rt.slot_mask, rt.cg_safe, rt.order, rt.cg_sorted):
+        assert arr.shape == (B, L, cmax)
+    # pad cells are flagged off and routed to safe real values
+    assert np.array_equal(rt.slot_mask, batch.cg >= 0)
+    assert np.all(rt.cg_safe[~rt.slot_mask] == 0)
+    assert np.array_equal(rt.cg_safe[rt.slot_mask],
+                          batch.cg[rt.slot_mask])
+    for b, lms in enumerate(lms_list):
+        for li, name in enumerate(batch.names):
+            cores = np.asarray(lms.ms[name].cg)
+            k = len(cores)
+            assert batch.cg_len[b, li] == k
+            # sorted-order prefix == np.argsort of the valid CG prefix
+            assert np.array_equal(rt.cg_sorted[b, li, :k], np.sort(cores))
+            assert np.array_equal(rt.order[b, li, :k], np.argsort(cores))
+            # pad slots: sorted view repeats the last real core (gathers
+            # through pads stay in-bounds and never add new ids)
+            assert np.all(rt.cg_sorted[b, li, k:] == np.sort(cores)[-1])
+            # order is a permutation of all Cmax slots, pads last
+            assert np.array_equal(np.sort(rt.order[b, li]),
+                                  np.arange(cmax))
+            assert np.all(rt.order[b, li, k:] >= k)
+
+
+def test_routing_tables_memoized():
+    batch, _ = _routing_batch(seed=9, n=3)
+    assert batch.routing_tables() is batch.routing_tables()

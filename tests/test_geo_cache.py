@@ -1,0 +1,109 @@
+"""Bounded geometry cache: _LRU semantics (cap, eviction order, recency
+refresh), the REPRO_GEO_CACHE_CAP override, and bit-identical rebuild of
+evicted _GEO_CACHE entries."""
+
+import numpy as np
+import pytest
+
+from repro.core.analyzer import _GEO_CACHE, _LRU, _geo_cache_cap
+from repro.core.evaluator import Evaluator
+from repro.core.graph_partition import partition_graph
+from repro.core.hw import ArchConfig
+from repro.core.tangram import tangram_map
+from repro.core.workloads import transformer
+
+
+def _arch():
+    return ArchConfig(x_cores=4, y_cores=3, xcut=2, ycut=1,
+                      noc_bw=16.0, d2d_bw=8.0, dram_bw=64.0,
+                      glb_kb=512, macs_per_core=256)
+
+
+def test_lru_caps_and_evicts_oldest():
+    lru = _LRU(maxsize=3)
+    for k in "abc":
+        lru.put(k, k.upper())
+    assert len(lru) == 3
+    lru.put("d", "D")                       # evicts "a", the oldest
+    assert len(lru) == 3
+    assert lru.get("a") is None
+    assert lru.get("b") == "B"
+
+
+def test_lru_get_refreshes_recency_near_cap():
+    lru = _LRU(maxsize=3)
+    for k in "abc":
+        lru.put(k, k.upper())
+    # at/above half-fill a hit refreshes recency: "a" becomes newest,
+    # so the next eviction takes "b"
+    assert lru.get("a") == "A"
+    lru.put("d", "D")
+    assert lru.get("a") == "A"
+    assert lru.get("b") is None
+
+
+def test_lru_below_half_fill_skips_refresh():
+    lru = _LRU(maxsize=10)
+    lru.put("a", 1)
+    lru.put("b", 2)
+    assert lru.get("a") == 1                # no reorder below half-fill
+    assert list(lru) == ["a", "b"]
+
+
+def test_lru_put_existing_key_does_not_evict():
+    lru = _LRU(maxsize=2)
+    lru.put("a", 1)
+    lru.put("b", 2)
+    lru.put("a", 3)                         # overwrite, not a new entry
+    assert len(lru) == 2
+    assert lru.get("a") == 3 and lru.get("b") == 2
+
+
+def test_geo_cache_cap_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_GEO_CACHE_CAP", raising=False)
+    assert _geo_cache_cap() == 262_144
+    monkeypatch.setenv("REPRO_GEO_CACHE_CAP", "1024")
+    assert _geo_cache_cap() == 1024
+    monkeypatch.setenv("REPRO_GEO_CACHE_CAP", "0")
+    assert _geo_cache_cap() == 262_144      # non-positive -> default
+    monkeypatch.setenv("REPRO_GEO_CACHE_CAP", "not-a-number")
+    assert _geo_cache_cap() == 262_144
+
+
+def test_geo_cache_is_bounded_lru():
+    assert isinstance(_GEO_CACHE, _LRU)
+    assert _GEO_CACHE.maxsize == _geo_cache_cap()
+
+
+def test_evicted_geometry_rebuilds_bit_identical():
+    """Shrink the shared cache so an analysis evicts its own entries,
+    then re-run: results must not change (pure geometry, eviction only
+    costs recompute time)."""
+    arch = _arch()
+    g = transformer(n_layers=1, d_model=64, d_ff=128, seq=32, name="tf-geo")
+    groups = partition_graph(g, arch, 8)
+    init = tangram_map(groups, g, arch)
+
+    def run():
+        ev = Evaluator(arch, g)
+        rows = ev.eval_requests_batch(list(init), 8)
+        return [(ge.delay_s, ge.energy_j, ge.stage_time_s,
+                 tuple(an.edge_bytes)) for ge, an in rows]
+
+    baseline = run()
+    saved_items = list(_GEO_CACHE.items())
+    saved_cap = _GEO_CACHE.maxsize
+    try:
+        _GEO_CACHE.clear()
+        _GEO_CACHE.maxsize = 2              # thrash: constant eviction
+        thrashed = run()
+        assert len(_GEO_CACHE) <= 2
+        _GEO_CACHE.clear()
+        _GEO_CACHE.maxsize = saved_cap
+        rebuilt = run()
+    finally:
+        _GEO_CACHE.maxsize = saved_cap
+        _GEO_CACHE.clear()
+        _GEO_CACHE.update(saved_items)
+    assert thrashed == baseline
+    assert rebuilt == baseline
