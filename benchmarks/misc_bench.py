@@ -600,6 +600,46 @@ def moe_throughput(iters: int = 300, rounds: int = 4) -> Dict:
             "expected_macs_ratio": macs_ratio}
 
 
+def serving_throughput(rounds: int = 4) -> Dict:
+    """Discrete-event replay throughput of the serving harness.
+
+    T-Map-screens the Table-I quick grid (deterministic), converts the
+    best candidate's delay into a per-token service model, and replays
+    the registered ``chat-quick`` trace under both scheduling modes —
+    wave batching (the ``serve_loop`` policy) and continuous slotting
+    (the ``slo`` DSE objective's model).  Reports simulated requests per
+    wall-second (how cheap an SLO prediction is inside a sweep) plus the
+    predicted p99s, which double as a drift canary for the queueing
+    model.  Recorded in BENCH_dse.json (``serving``).
+    """
+    from repro.serve import (make_trace, replay, resolve_traffic,
+                             service_model_from_delay)
+
+    delay = run_dse(_quick_grid(), {"TF": _tf_quick()},
+                    DSEConfig(batch=8, sa=SAConfig(iters=150, seed=0)),
+                    use_sa=False)[0].delay_s
+    model = service_model_from_delay(delay, batch=8, seq_ref=64)
+    tm = resolve_traffic("chat-quick")
+    trace = make_trace(tm.trace_spec, seed=0)
+    out: Dict = {"delay_s": delay, "trace": tm.trace_spec,
+                 "n_requests": len(trace.requests)}
+    for mode in ("wave", "continuous"):
+        rep = replay(trace, model, mode=mode, max_batch=tm.max_batch)
+        best = 1e9
+        for _ in range(rounds):
+            t0 = time.time()
+            rep = replay(trace, model, mode=mode, max_batch=tm.max_batch)
+            best = min(best, time.time() - t0)
+        out[mode] = {"replay_s": best,
+                     "req_per_wall_s": len(trace.requests) / best,
+                     "p99_ttft_s": rep.p99_ttft_s,
+                     "p99_e2e_s": rep.p99_e2e_s}
+        print(f"[serving] {mode}: {len(trace.requests) / best:.0f} "
+              f"simulated req/s wall ({best * 1e3:.2f} ms/replay), "
+              f"p99 e2e {rep.p99_e2e_s:.4g}s")
+    return out
+
+
 def dse_bench(quick: bool = False) -> Dict:
     """The BENCH_dse.json payload: screening / SA / sweep before-vs-after.
 
@@ -633,6 +673,7 @@ def dse_bench(quick: bool = False) -> Dict:
         "sweep_n4": sweep_n4_throughput(rounds=1 if quick else 4),
         "evaluator": sa_throughput(),
         "moe_eval": moe_throughput(rounds=2 if quick else 4),
+        "serving": serving_throughput(rounds=2 if quick else 4),
     }
     base_path = Path(__file__).resolve().parent / "pr4_baseline.json"
     if base_path.exists():

@@ -57,6 +57,9 @@ def make_trajectory_entry(data: dict, commit: str, date: str) -> dict:
         "sa_chain_n4_speedup_vs_pr4":
             data.get("vs_pr4", {}).get("sa_chain_n4_speedup"),
         "sweep_n4_wall_s": data.get("sweep_n4", {}).get("wall_s"),
+        "serve_replay_req_per_s":
+            data.get("serving", {}).get("continuous", {}).get(
+                "req_per_wall_s"),
     }
 
 

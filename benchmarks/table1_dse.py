@@ -37,6 +37,7 @@ from repro.core.explore import (ExplorationEngine, merge_checkpoints,
                                 pareto_frontier, parse_shard_spec)
 from repro.core.sa import SAConfig
 from repro.core.workloads import make_workload, transformer
+from repro.launch.cli import add_workload_args, parse_kv, workload_bindings
 
 from .common import RESULTS, cached
 
@@ -80,7 +81,9 @@ def _run(quick: bool = False, shard: Tuple[int, int] = (0, 1),
          n_workers: Optional[int] = None,
          screen: Union[None, float, str] = None,
          workloads_cli: Optional[Dict[str, str]] = None,
-         weights: Optional[Dict[str, float]] = None) -> Dict:
+         weights: Optional[Dict[str, float]] = None,
+         objective: Optional[str] = None,
+         traffic: Optional[str] = None) -> Dict:
     cands, workloads, cfg, keep = _setup(quick)
     if workloads_cli:
         # --workload NAME=SPEC replaces the default workload set entirely:
@@ -90,6 +93,10 @@ def _run(quick: bool = False, shard: Tuple[int, int] = (0, 1),
                      for name, spec in workloads_cli.items()}
     if weights:
         cfg = dataclasses.replace(cfg, workload_weights=dict(weights))
+    if objective:
+        cfg = dataclasses.replace(cfg, objective=objective)
+    if traffic:
+        cfg = dataclasses.replace(cfg, traffic=traffic)
     ckpt = Path(checkpoint) if checkpoint else default_checkpoint(quick, shard)
     if force and ckpt.exists():
         # the sweep fingerprint versions cfg+workloads, not the cost model:
@@ -121,6 +128,9 @@ def _run(quick: bool = False, shard: Tuple[int, int] = (0, 1),
         "n_workers": n_workers,
         "shard": f"{si}/{sn}",
         "quick": quick,
+        **({"objective": cfg.objective, "traffic": str(cfg.traffic),
+            "best_slo": best.slo if best else None}
+           if cfg.objective != "geomean" else {}),
         "screen_top5": [[p.arch.label(), p.objective] for p in screen[:5]],
         "best_arch": best.arch.label() if best else None,
         "best": ({"mc": best.mc, "E": best.energy_j, "D": best.delay_s,
@@ -190,28 +200,29 @@ def cli() -> None:
                     help="screening mode: a keep fraction (0..1] or 'auto' "
                     "for the adaptive gap rule (unsharded runs only); "
                     "default derives from --quick / N_REFINE")
-    ap.add_argument("--workload", action="append", metavar="NAME=SPEC",
-                    help="replace the workload set (repeatable); SPEC is a "
-                    "registry preset (tf-quick, moe-quick, mla-quick, ...) "
-                    "or a parameterized spec — see "
-                    "repro.core.workloads.make_workload")
+    add_workload_args(ap, help_extra="Replaces the default workload set "
+                      "entirely.")
     ap.add_argument("--weight", action="append", metavar="NAME=W",
                     help="portfolio traffic-share weight for workload NAME "
                     "(repeatable); turns the reduction into the weighted "
                     "geomean and stamps the weights into the sweep "
                     "fingerprint")
+    ap.add_argument("--objective", choices=("geomean", "slo"), default=None,
+                    help="candidate scoring: historical MC^a*E^b*D^g "
+                    "geomean, or 'slo' — predicted p99 e2e latency under "
+                    "--traffic replaces the raw delay term (stamped into "
+                    "the sweep fingerprint)")
+    ap.add_argument("--traffic", default=None, metavar="MODEL",
+                    help="traffic model for --objective slo: a registered "
+                    "name (chat-quick, diurnal-quick) or a trace spec — "
+                    "see repro.serve.slo")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     screen: Union[None, float, str] = None
     if args.screen is not None:
         screen = "auto" if args.screen == "auto" else float(args.screen)
-    workloads_cli: Optional[Dict[str, str]] = None
-    if args.workload:
-        workloads_cli = dict(item.split("=", 1) for item in args.workload)
-    weights: Optional[Dict[str, float]] = None
-    if args.weight:
-        weights = {k: float(v) for k, v in
-                   (item.split("=", 1) for item in args.weight)}
+    workloads_cli = workload_bindings(args.workload) or None
+    weights = parse_kv(args.weight, float, "--weight")
 
     if args.merge:
         if not args.checkpoint:
@@ -221,11 +232,13 @@ def cli() -> None:
 
     shard = parse_shard_spec(args.shard)
     if args.quick or shard != (0, 1) or args.out or args.checkpoint \
-            or screen is not None or workloads_cli or weights:
+            or screen is not None or workloads_cli or weights \
+            or args.objective or args.traffic:
         data = _run(quick=args.quick, shard=shard,
                     checkpoint=args.checkpoint, force=args.force,
                     n_workers=args.workers, screen=screen,
-                    workloads_cli=workloads_cli, weights=weights)
+                    workloads_cli=workloads_cli, weights=weights,
+                    objective=args.objective, traffic=args.traffic)
         if data["best"] is not None:
             print(f"[table1] shard best: {data['best_arch']} "
                   f"obj={data['best']['objective']:.3e} "

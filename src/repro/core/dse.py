@@ -40,6 +40,9 @@ class DSEPoint:
     objective: float
     per_workload: Dict[str, Tuple[float, float]] = field(default_factory=dict)
     mappings: Dict[str, Mapping] = field(default_factory=dict)
+    # predicted serving metrics (objective="slo" sweeps only): p50/95/99
+    # TTFT + e2e seconds, throughput, occupancy — see repro.serve.slo
+    slo: Optional[Dict[str, float]] = None
 
     @property
     def edp(self) -> float:
@@ -60,6 +63,18 @@ class DSEConfig:
     # bit-identical to it but stamp a ``:w=`` segment into the sweep
     # fingerprint.  Missing names default to weight 1.0.
     workload_weights: Optional[Dict[str, float]] = None
+    # scoring mode: "geomean" (historical MC^a * E^b * D^g; the default
+    # keeps every existing sweep bit-identical) or "slo", which replaces
+    # the raw delay term with the predicted p99 end-to-end latency of the
+    # candidate serving ``traffic`` (a repro.serve.slo.TrafficModel, a
+    # registered model name, or a raw trace spec).  Queueing over the
+    # traffic's arrival process makes p99 convex in D, so E/D trade-offs
+    # rank differently than under the raw-delay objective.  Tasks (E, D)
+    # are computed identically in both modes — only the reduction differs
+    # — but the engine stamps an ``obj=`` fingerprint segment so
+    # differently-scored sweep artifacts are never conflated.
+    objective: str = "geomean"
+    traffic: Optional[object] = None
 
 
 @dataclass
@@ -177,9 +192,26 @@ def reduce_tasks(arch: ArchConfig, cfg: DSEConfig,
         else max(1, len(task_results))
     E = math.exp(logE / n)
     D = math.exp(logD / n)
-    obj = (mc ** cfg.alpha) * (E ** cfg.beta) * (D ** cfg.gamma)
+    slo: Optional[Dict[str, float]] = None
+    if cfg.objective == "slo":
+        # tail-latency scoring: the geomean delay becomes a per-token
+        # service model replayed over the traffic model's arrival process
+        # (deterministic, cached); p99 e2e replaces D in the objective
+        from ..serve.slo import SLO_SCALAR_KEY, predict_slo
+        if cfg.traffic is None:
+            raise ValueError(
+                "objective='slo' needs cfg.traffic (a TrafficModel, a "
+                "registered name, or a trace spec — see repro.serve.slo)")
+        slo = predict_slo(D, cfg.traffic, cfg.batch)
+        obj = (mc ** cfg.alpha) * (E ** cfg.beta) \
+            * (slo[SLO_SCALAR_KEY] ** cfg.gamma)
+    elif cfg.objective == "geomean":
+        obj = (mc ** cfg.alpha) * (E ** cfg.beta) * (D ** cfg.gamma)
+    else:
+        raise ValueError(
+            f"unknown DSE objective {cfg.objective!r}: 'geomean' or 'slo'")
     return DSEPoint(arch=arch, mc=mc, energy_j=E, delay_s=D, objective=obj,
-                    per_workload=per, mappings=maps)
+                    per_workload=per, mappings=maps, slo=slo)
 
 
 def evaluate_candidate(arch: ArchConfig, workloads: Dict[str, Graph],
@@ -214,7 +246,9 @@ def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
             n_workers: int = 1, screen_keep: Union[float, str] = 1.0,
             checkpoint: Union[str, Path, None] = None,
             shard: Tuple[int, int] = (0, 1),
-            mp_context: str = "spawn") -> List[DSEPoint]:
+            mp_context: str = "spawn",
+            objective: Optional[str] = None,
+            traffic: Optional[object] = None) -> List[DSEPoint]:
     """Sweep ``candidates``; thin wrapper over the exploration engine.
 
     * ``n_workers > 1`` fans (candidate x workload) tasks out over worker
@@ -231,7 +265,16 @@ def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
       give each shard its own checkpoint and reconstruct the full sweep
       with ``explore.merge_checkpoints`` — the merged result is
       bit-identical to an unsharded run.
+    * ``objective="slo"`` with ``traffic=...`` scores candidates by
+      predicted p99 end-to-end latency under the traffic model instead of
+      the raw geomean delay (convenience overrides for
+      ``cfg.objective``/``cfg.traffic``); left at ``None`` the sweep —
+      and its checkpoint fingerprint — is untouched.
     """
+    if objective is not None:
+        cfg = replace(cfg, objective=objective)
+    if traffic is not None:
+        cfg = replace(cfg, traffic=traffic)
     with _explore.ExplorationEngine(workloads, cfg, n_workers=n_workers,
                                     checkpoint=checkpoint, progress=progress,
                                     mp_context=mp_context) as eng:
@@ -255,7 +298,10 @@ def joint_reuse_dse(chiplet_grid: Sequence[ArchConfig],
                     scale_factors: Sequence[int],
                     workloads: Dict[str, Graph],
                     cfg: DSEConfig,
-                    n_workers: int = 1) -> List[Tuple[ArchConfig, float]]:
+                    n_workers: int = 1,
+                    objective: Optional[str] = None,
+                    traffic: Optional[object] = None
+                    ) -> List[Tuple[ArchConfig, float]]:
     """Paper Sec. VII-B: pick ONE chiplet; build each scale by tiling it.
 
     ``chiplet_grid`` holds base (single-chiplet) configs; ``scale_factors``
@@ -272,7 +318,16 @@ def joint_reuse_dse(chiplet_grid: Sequence[ArchConfig],
     weights are stamped into the sweep fingerprint (schema-v2 checkpoint
     header ``:w=`` segment), so differently-weighted portfolios never
     share checkpoint records.
+
+    ``objective="slo"`` with ``traffic=...`` scores each scale by
+    predicted tail latency under the traffic model (see :func:`run_dse`);
+    the product over scales then selects the chiplet whose tilings best
+    keep the deployment's p99 in budget rather than its raw delay.
     """
+    if objective is not None:
+        cfg = replace(cfg, objective=objective)
+    if traffic is not None:
+        cfg = replace(cfg, traffic=traffic)
     scales = list(scale_factors)
     flat = [scaled_arch(base, s) for base in chiplet_grid for s in scales]
     with _explore.ExplorationEngine(workloads, cfg,

@@ -44,30 +44,6 @@ from pathlib import Path
 from typing import List
 
 
-def _resolve_workloads(specs: List[str], wl_names: List[str]):
-    """--workload NAME=SPEC bindings -> {name: Graph}.
-
-    A bare SPEC (no '=') binds to the checkpoint's single workload; with
-    several workloads every name must be bound explicitly."""
-    from repro.realize.plan import graph_from_spec
-    out = {}
-    for s in specs:
-        if "=" in s:
-            name, spec = s.split("=", 1)
-        elif len(wl_names) == 1:
-            name, spec = wl_names[0], s
-        else:
-            raise SystemExit(
-                f"--workload {s!r}: checkpoint has workloads {wl_names}; "
-                f"bind explicitly with NAME=SPEC")
-        out[name] = graph_from_spec(spec)
-    missing = [n for n in wl_names if n not in out]
-    if missing:
-        raise SystemExit(
-            f"no --workload binding for checkpoint workload(s) {missing}")
-    return out
-
-
 def _device_pool(mesh_spec: str):
     import jax
     from .mesh import DRYRUN_ENV_FIX, make_production_mesh
@@ -139,9 +115,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from repro.core.explore import ResumableSweep
+    from repro.launch.cli import resolve_workloads, workload_bindings
     from repro.realize.calibrate import fit_overlay, save_overlay
     from repro.realize.measure import measure_candidate
     from repro.realize.plan import (checkpoint_workload_fingerprints,
+                                    graph_from_spec,
                                     load_realize_candidates, plans_for)
     from repro.realize.program import build_program
 
@@ -157,7 +135,11 @@ def main() -> None:
         raise SystemExit(
             f"checkpoint has workload(s) {wl_names}; bind each with "
             f"--workload NAME=SPEC (e.g. --workload TF=tf-quick)")
-    workloads = _resolve_workloads(args.workload, wl_names)
+    # shared NAME=SPEC grammar (launch.cli): a bare SPEC binds to the
+    # checkpoint's single workload; several workloads need explicit names
+    workloads = resolve_workloads(
+        workload_bindings(args.workload, names=wl_names),
+        builder=graph_from_spec)
     cands = load_realize_candidates(ckpt, workloads, top=args.top,
                                     sweep=ck_sweep)
     pool = _device_pool(args.mesh)

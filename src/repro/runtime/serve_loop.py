@@ -1,18 +1,31 @@
 """Batched serving loop: wave-style continuous batching.
 
 Requests queue up; the server packs up to ``max_batch`` of them into a wave,
-left-pads to a common length, prefIlls once, then decodes until every slot
+left-pads to a common length, prefills once, then decodes until every slot
 hits EOS or its token budget.  Finished slots are masked out (their tokens
 ignored) so stragglers don't produce garbage.  This is the paper-agnostic
 serving substrate the Gemini-mapped pipeline executor (runtime.pipeline)
 plugs into.
+
+The transport-agnostic pieces are :class:`RequestQueue` (admission, FIFO,
+enqueue timestamps) and :class:`ModelWaveExecutor` (the JAX model behind
+the structural :class:`repro.serve.harness.WaveExecutor` protocol — it
+reports a measured :class:`~repro.serve.harness.WaveCost` per wave, so the
+traffic-replay harness can drive the real model path).  :class:`Server`
+is the thin compat shim over both that `examples/serve_lm.py` uses.
+
+Timing contract: ``Result.latency_s`` is the **per-request** queueing +
+service time ``finish_t - enqueue_t``.  Slots in the same wave finish at
+different decode steps, so latencies differ across a mixed-length wave —
+the earlier API reported the shared wave duration for every request,
+which silently corrupted every percentile downstream.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +34,12 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model_api
 from ..nn.params import default_rules
+from ..serve.harness import WaveCost
+
+# Decode-phase KV-cache length cap.  Prefill caches still size to
+# ``max_seq``; the decode cache is capped so tiny serving configs don't
+# allocate paper-scale caches (override via ``cache_len=``).
+DEFAULT_DECODE_CACHE_LEN = 1500
 
 
 @dataclass
@@ -28,82 +47,199 @@ class Request:
     rid: int
     prompt: np.ndarray            # (prompt_len,) int32
     max_new: int = 32
+    enqueue_t: float = 0.0        # stamped by RequestQueue.submit if unset
 
 
 @dataclass
 class Result:
     rid: int
     tokens: np.ndarray
-    latency_s: float
+    latency_s: float              # finish_t - enqueue_t, per request
+    enqueue_t: float = 0.0
+    start_t: float = 0.0          # wave admission (prefill launch)
+    finish_t: float = 0.0         # this slot's last token, not wave end
 
 
-class Server:
+class RequestQueue:
+    """Transport-agnostic FIFO admission queue.
+
+    Stamps ``enqueue_t`` at submit time (wall clock) unless the request
+    already carries one (trace replay pre-stamps virtual arrival times).
+    """
+
+    def __init__(self) -> None:
+        self._q: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        if req.enqueue_t == 0.0:
+            req.enqueue_t = time.time()
+        self._q.append(req)
+
+    def next_wave(self, max_batch: int) -> List[Request]:
+        wave, self._q = self._q[:max_batch], self._q[max_batch:]
+        return wave
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def pending(self) -> Sequence[Request]:
+        return tuple(self._q)
+
+
+class ModelWaveExecutor:
+    """Real-model serving backend: one jitted prefill + decode loop.
+
+    Satisfies the ``repro.serve.harness.WaveExecutor`` protocol:
+    ``execute(wave)`` accepts trace requests (prompt tokens synthesized
+    deterministically from the rid, or supplied via ``prompt_fn``) and
+    returns a measured :class:`WaveCost` — wall-clock prefill and
+    per-decode-step durations with per-slot token counts — which is what
+    lets the harness attribute distinct finish times to slots that stop
+    at different steps.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_seq: int = 512, eos_id: int = 0, rules=None,
-                 greedy: bool = True):
+                 cache_len: Optional[int] = None,
+                 prompt_fn: Optional[Callable[[object], np.ndarray]] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.cache_len = min(max_seq, cache_len or DEFAULT_DECODE_CACHE_LEN)
         self.rules = rules or default_rules()
+        self.prompt_fn = prompt_fn
         self.api = model_api(cfg)
-        self._queue: List[Request] = []
         self._decode = jax.jit(
             lambda p, t, c: self.api.decode_step(p, t, c, self.rules))
         self._prefill = jax.jit(
             lambda p, b, c: self.api.prefill(p, b, c, self.rules))
 
-    def submit(self, req: Request) -> None:
-        self._queue.append(req)
+    # -- prompt materialization --------------------------------------
+    def _prompt_of(self, req) -> np.ndarray:
+        if getattr(req, "prompt", None) is not None:
+            return np.asarray(req.prompt, np.int32)
+        if self.prompt_fn is not None:
+            return np.asarray(self.prompt_fn(req), np.int32)
+        # Deterministic synthetic prompt from the rid (trace replay).
+        rng = np.random.Generator(np.random.Philox(
+            np.random.SeedSequence([0x544F4B53, int(req.rid)])))
+        n = max(1, int(getattr(req, "prompt_len", 1)))
+        vocab = int(self.cfg.vocab)
+        return rng.integers(1, max(2, vocab), size=n, dtype=np.int64) \
+                  .astype(np.int32)
 
-    def _pad_wave(self, wave: List[Request]) -> np.ndarray:
-        L = max(len(r.prompt) for r in wave)
-        toks = np.full((len(wave), L), self.eos_id, np.int32)
-        for i, r in enumerate(wave):
-            toks[i, L - len(r.prompt):] = r.prompt     # left-pad
+    def _pad_wave(self, prompts: List[np.ndarray]) -> np.ndarray:
+        L = max(len(p) for p in prompts)
+        toks = np.full((len(prompts), L), self.eos_id, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, L - len(p):] = p                   # left-pad
         return toks
 
-    def step(self) -> List[Result]:
-        """Serve one wave; returns completed results (possibly empty)."""
-        if not self._queue:
-            return []
-        wave = self._queue[:self.max_batch]
-        self._queue = self._queue[self.max_batch:]
-        t0 = time.time()
-        toks = self._pad_wave(wave)
+    # -- core wave execution -----------------------------------------
+    def run_wave(self, wave: Sequence[object]
+                 ) -> Tuple[np.ndarray, np.ndarray, WaveCost]:
+        """Execute one wave; returns (out_tokens, n_tokens, cost).
+
+        ``out_tokens`` is (B, max_budget) with finished slots masked
+        (budget-exceeding steps are never written — the old loop wrote
+        token ``t`` before applying the budget mask, so smaller-budget
+        slots leaked one token past their budget and burned a decode
+        step a single-request ``max_new=1`` wave never needed).
+        """
+        prompts = [self._prompt_of(r) for r in wave]
+        budgets = np.array([int(r.max_new) for r in wave], np.int32)
+        toks = self._pad_wave(prompts)
         B, L = toks.shape
-        cache, _ = self.api.init_cache(B, self.max_seq,
-                                       min(self.max_seq, 1500))
+        t0 = time.time()
+        cache, _ = self.api.init_cache(B, self.max_seq, self.cache_len)
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.frontend in ("patch", "audio"):
             batch["embeds"] = jnp.zeros((B, L, self.cfg.d_model),
                                         jnp.bfloat16)
         logits, cache = self._prefill(self.params, batch, cache)
-        max_new = max(r.max_new for r in wave)
-        out = np.zeros((B, max_new), np.int32)
-        done = np.zeros((B,), bool)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        cur.block_until_ready()
+        prefill_s = time.time() - t0
+        max_new = int(budgets.max())
+        out = np.full((B, max_new), self.eos_id, np.int32)
+        done = np.zeros((B,), bool)
+        ntok = np.zeros((B,), np.int32)
+        step_s: List[float] = []
         for t in range(max_new):
-            out[:, t] = np.asarray(cur[:, 0])
-            done |= out[:, t] == self.eos_id
-            done |= np.array([t >= r.max_new for r in wave])
+            tok = np.asarray(cur[:, 0])
+            live = ~done
+            out[live, t] = tok[live]
+            ntok[live] += 1
+            done |= tok == self.eos_id
+            done |= (t + 1) >= budgets
             if done.all():
                 break
+            ts = time.time()
             logits, cache = self._decode(self.params, cur, cache)
             cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        dt = time.time() - t0
+            cur.block_until_ready()
+            step_s.append(time.time() - ts)
+        cost = WaveCost(prefill_s=prefill_s, step_s=step_s,
+                        slot_tokens=[int(n) for n in ntok],
+                        tokens=[out[i, :ntok[i]] for i in range(B)])
+        return out, ntok, cost
+
+    def execute(self, wave: Sequence[object]) -> WaveCost:
+        """WaveExecutor protocol entry point (harness replay)."""
+        _, _, cost = self.run_wave(wave)
+        return cost
+
+
+class Server:
+    """Compat shim: RequestQueue + ModelWaveExecutor behind the old API."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_seq: int = 512, eos_id: int = 0, rules=None,
+                 greedy: bool = True, cache_len: Optional[int] = None):
+        del greedy                       # argmax decode is the only policy
+        self.executor = ModelWaveExecutor(
+            cfg, params, max_batch=max_batch, max_seq=max_seq,
+            eos_id=eos_id, rules=rules, cache_len=cache_len)
+        self.queue = RequestQueue()
+
+    # Old surface, delegated.
+    cfg = property(lambda self: self.executor.cfg)
+    params = property(lambda self: self.executor.params)
+    max_batch = property(lambda self: self.executor.max_batch)
+    max_seq = property(lambda self: self.executor.max_seq)
+    eos_id = property(lambda self: self.executor.eos_id)
+    rules = property(lambda self: self.executor.rules)
+    api = property(lambda self: self.executor.api)
+
+    def submit(self, req: Request) -> None:
+        self.queue.submit(req)
+
+    def step(self) -> List[Result]:
+        """Serve one wave; returns completed results (possibly empty)."""
+        if not len(self.queue):
+            return []
+        wave = self.queue.next_wave(self.executor.max_batch)
+        start_t = time.time()
+        out, ntok, cost = self.executor.run_wave(wave)
+        first = start_t + cost.prefill_s
+        cum = np.concatenate([[0.0], np.cumsum(cost.step_s)])
         results = []
         for i, r in enumerate(wave):
-            seq = out[i, :r.max_new]
+            seq = out[i, :ntok[i]]
             stop = np.nonzero(seq == self.eos_id)[0]
             if len(stop):
                 seq = seq[:stop[0] + 1]
-            results.append(Result(rid=r.rid, tokens=seq, latency_s=dt))
+            fin = first + float(cum[min(ntok[i] - 1, len(cost.step_s))])
+            results.append(Result(
+                rid=r.rid, tokens=seq, latency_s=fin - r.enqueue_t,
+                enqueue_t=r.enqueue_t, start_t=start_t, finish_t=fin))
         return results
 
     def run_until_empty(self) -> List[Result]:
         results = []
-        while self._queue:
+        while len(self.queue):
             results.extend(self.step())
         return results

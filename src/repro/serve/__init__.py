@@ -1,0 +1,31 @@
+"""Traffic-replay serving subsystem.
+
+The ROADMAP's "millions of users" axis: deterministic synthetic traffic
+traces (:mod:`repro.serve.trace`), a discrete-event replay harness with
+continuous batch slotting and SLO reporting (:mod:`repro.serve.harness`),
+and the analytical queueing predictor + traffic-model registry that feeds
+tail latency back into the DSE as an objective (:mod:`repro.serve.slo`).
+
+The package is deliberately NumPy-pure: executors that touch JAX (the
+real-model wave executor, the realized-program path) live in
+``runtime/serve_loop.py`` and ``launch/serve.py`` and plug in through the
+structural :class:`repro.serve.harness.WaveExecutor` protocol.
+"""
+
+from .harness import (AnalyticalWaveExecutor, RequestTimeline, ServeReport,
+                      ServiceModel, WaveCost, WaveExecutor, replay,
+                      saturation_sweep, service_model_from_delay)
+from .slo import (TrafficModel, register_traffic_model, resolve_traffic,
+                  predict_slo)
+from .trace import (Trace, TraceRequest, diurnal_trace, make_trace,
+                    poisson_trace, respec)
+
+__all__ = [
+    "Trace", "TraceRequest", "poisson_trace", "diurnal_trace", "make_trace",
+    "respec",
+    "WaveExecutor", "WaveCost", "ServiceModel", "AnalyticalWaveExecutor",
+    "RequestTimeline", "ServeReport", "replay", "saturation_sweep",
+    "service_model_from_delay",
+    "TrafficModel", "register_traffic_model", "resolve_traffic",
+    "predict_slo",
+]

@@ -1,0 +1,348 @@
+"""Serving harness: trace generators, replay/SLO reports, the ``slo``
+DSE objective, and the redesigned serve_loop timing contract."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.serve import (AnalyticalWaveExecutor, ServiceModel, Trace,
+                         TrafficModel, WaveExecutor, make_trace,
+                         poisson_trace, predict_slo, replay, resolve_traffic,
+                         respec, saturation_sweep, service_model_from_delay)
+from repro.serve.slo import SLO_SCALAR_KEY
+
+SET = settings(max_examples=20, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+SPEC = "poisson:rate=8,n=32,seed=0,plen=4..32,new=8..32"
+MODEL = ServiceModel(prefill_s_per_token=1e-4, decode_s_per_token=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# trace generators
+# ---------------------------------------------------------------------------
+
+def test_trace_determinism_and_fingerprint():
+    a, b = make_trace(SPEC, seed=3), make_trace(SPEC, seed=3)
+    assert a.to_jsonl() == b.to_jsonl()            # byte-identical
+    assert a.fingerprint() == b.fingerprint()
+    other = make_trace(SPEC, seed=4)
+    assert other.to_jsonl() != a.to_jsonl()
+    assert other.fingerprint() != a.fingerprint()
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    t = make_trace(SPEC, seed=1)
+    p = t.save(tmp_path / "t.jsonl")
+    back = Trace.load(p)
+    assert back.requests == t.requests
+    assert (back.name, back.spec, back.seed) == (t.name, t.spec, t.seed)
+
+
+def test_respec_overrides_rate():
+    spec2 = respec(SPEC, rate=16)
+    assert "rate=16" in spec2
+    t = make_trace(spec2, seed=0)
+    # roughly double the base spec's empirical rate (same seed, same n)
+    assert t.arrival_rate() > make_trace(SPEC, seed=0).arrival_rate() * 1.5
+
+
+def test_diurnal_trace_builds():
+    t = make_trace("diurnal:rate=8,n=32,seed=0,plen=4..8,new=4..8,"
+                   "period=30,peak=3", seed=0)
+    arr = [r.arrival_s for r in t.requests]
+    assert len(t) == 32 and arr == sorted(arr)
+    assert all(r.prompt_len >= 1 and r.max_new >= 1 for r in t.requests)
+
+
+@SET
+@given(rate=st.floats(1.0, 32.0), seed=st.integers(0, 10_000))
+def test_poisson_interarrival_mean(rate, seed):
+    """Mean inter-arrival of n exponential draws ~ 1/rate (5 sigma)."""
+    n = 256
+    t = poisson_trace(rate, n, seed=seed)
+    gaps = np.diff([0.0] + [r.arrival_s for r in t.requests])
+    assert (gaps >= 0).all()
+    tol = 5.0 / (rate * np.sqrt(n))                # 5 x the SE of the mean
+    assert abs(gaps.mean() - 1.0 / rate) < tol
+
+
+# ---------------------------------------------------------------------------
+# replay harness
+# ---------------------------------------------------------------------------
+
+def test_replay_smoke_both_modes():
+    trace = make_trace(SPEC, seed=0)
+    for mode in ("wave", "continuous"):
+        rep = replay(trace, MODEL, mode=mode, max_batch=4)
+        s = rep.summary()
+        assert s["mode"] == mode and s["timing"] == "virtual"
+        assert len(rep.requests) == len(trace)
+        assert 0.0 < s["mean_occupancy"] <= 1.0
+        for k in ("p50", "p95", "p99"):
+            assert s["ttft_s"][k] <= s["e2e_s"][k]
+
+
+def test_latency_monotonicity_invariant():
+    rep = replay(make_trace(SPEC, seed=2), MODEL, mode="continuous",
+                 max_batch=4)
+    for tl in rep.requests:
+        assert tl.enqueue_t <= tl.start_t <= tl.first_token_t <= tl.finish_t
+        assert tl.ttft_s <= tl.latency_s
+        assert tl.n_tokens >= 1
+
+
+def test_mixed_wave_latencies_differ():
+    """Slots stopping at different decode steps must finish at different
+    times — the pre-redesign API reported one shared wave duration."""
+    from repro.serve import TraceRequest
+    reqs = Trace(name="one-wave", spec="manual", seed=0, requests=[
+        TraceRequest(rid=i, arrival_s=0.0, prompt_len=8, max_new=new)
+        for i, new in enumerate((2, 9, 17, 30))])
+    rep = replay(reqs, AnalyticalWaveExecutor(MODEL, max_batch=4),
+                 mode="wave")
+    assert rep.n_waves == 1
+    lat = {tl.rid: tl.latency_s for tl in rep.requests}
+    assert len(set(lat.values())) > 1
+    by_new = {r.rid: r.max_new for r in reqs.requests}
+    fins = {tl.rid: tl.finish_t for tl in rep.requests}
+    # within the single wave, more decode steps -> later finish
+    order = sorted(by_new, key=by_new.get)
+    assert [fins[r] for r in order] == sorted(fins.values())
+
+
+def test_replay_deterministic():
+    trace = make_trace(SPEC, seed=0)
+    a = replay(trace, MODEL, mode="continuous", max_batch=4).to_json()
+    b = replay(trace, MODEL, mode="continuous", max_batch=4).to_json()
+    assert a == b
+
+
+def test_continuous_mode_rejects_opaque_executor():
+    class Opaque:
+        max_batch = 4
+
+        def execute(self, wave):
+            raise AssertionError("never called")
+    with pytest.raises(ValueError, match="continuous"):
+        replay(make_trace(SPEC, seed=0), Opaque(), mode="continuous")
+
+
+def test_saturation_sweep_finds_knee():
+    model = ServiceModel(prefill_s_per_token=1e-3, decode_s_per_token=1e-3)
+    sat = saturation_sweep(
+        lambda r: make_trace(respec(SPEC, rate=r), seed=0),
+        lambda: model, rates=[1, 4, 16, 64, 256, 1024],
+        mode="continuous", max_batch=4)
+    assert sat["saturated"]
+    assert sat["sat_rate_rps"] < 1024
+    rows = sat["sweep"]
+    assert rows[-1]["p99_e2e_s"] > sat["slo_mult"] * sat["ref_p99_e2e_s"]
+
+
+# ---------------------------------------------------------------------------
+# shared launcher CLI grammar
+# ---------------------------------------------------------------------------
+
+def test_workload_bindings_grammar():
+    from repro.launch.cli import workload_bindings
+    assert workload_bindings(["TF=tf-quick"]) == {"TF": "tf-quick"}
+    assert workload_bindings(["tf-quick"], names=["TF"]) \
+        == {"TF": "tf-quick"}
+    # a parameterized bare spec's first '=' is part of the spec
+    spec = "transformer:n_layers=1,d_model=64"
+    assert workload_bindings([spec], names=["TF"]) == {"TF": spec}
+    with pytest.raises(SystemExit):                # ambiguous bare spec
+        workload_bindings(["tf-quick"], names=["A", "B"])
+    with pytest.raises(SystemExit):                # unbound name
+        workload_bindings(["A=tf-quick"], names=["A", "B"])
+
+
+# ---------------------------------------------------------------------------
+# slo: traffic models + analytical predictor
+# ---------------------------------------------------------------------------
+
+def test_resolve_traffic_forms():
+    tm = resolve_traffic("chat-quick")
+    assert isinstance(tm, TrafficModel) and tm.name == "chat-quick"
+    adhoc = resolve_traffic(SPEC)
+    assert adhoc.name == "adhoc" and adhoc.trace_spec == SPEC
+    assert resolve_traffic(tm) is tm
+    with pytest.raises(KeyError, match="chat-quick"):
+        resolve_traffic("no-such-model")
+    with pytest.raises(ValueError):
+        resolve_traffic("bogus:rate=nope")
+
+
+def test_traffic_fingerprint_stable():
+    a = resolve_traffic("chat-quick").fingerprint()
+    assert a == resolve_traffic("chat-quick").fingerprint()
+    assert a.startswith("chat-quick.")
+    assert a != resolve_traffic(SPEC).fingerprint()
+
+
+def test_predict_slo_keys_and_cache():
+    out = predict_slo(2e-4, "chat-quick", batch=8)
+    for k in ("p50_e2e_s", "p95_e2e_s", SLO_SCALAR_KEY, "p99_ttft_s",
+              "throughput_rps", "mean_occupancy"):
+        assert k in out
+    assert out == predict_slo(2e-4, "chat-quick", batch=8)   # lru hit
+    # heavier per-token cost under identical traffic -> worse tail
+    assert predict_slo(8e-4, "chat-quick", batch=8)[SLO_SCALAR_KEY] \
+        > out[SLO_SCALAR_KEY]
+
+
+def test_service_model_from_delay():
+    m = service_model_from_delay(0.512, batch=8, seq_ref=64)
+    assert m.decode_s_per_token == pytest.approx(0.512 / (8 * 64))
+    assert m.prefill_s_per_token == pytest.approx(m.decode_s_per_token)
+    m2 = service_model_from_delay(0.512, batch=8, seq_ref=64,
+                                  decode_mult=2.0)
+    assert m2.decode_s_per_token == pytest.approx(2 * m.decode_s_per_token)
+
+
+# ---------------------------------------------------------------------------
+# slo as a DSE objective
+# ---------------------------------------------------------------------------
+
+def _quick_dse():
+    from repro.core.dse import DSEConfig, grid_candidates
+    from repro.core.sa import SAConfig
+    from repro.core.workloads import transformer
+    grid = grid_candidates(
+        72.0, mac_options=(512, 1024), cut_options=(1, 2),
+        dram_per_tops=(2.0,), noc_options=(16, 32), d2d_ratio=(0.5,),
+        glb_options=(1024, 2048))
+    wl = {"TF": transformer(n_layers=2, d_model=128, d_ff=256, seq=64,
+                            name="tf-s")}
+    return grid, wl, DSEConfig(batch=8, sa=SAConfig(iters=150, seed=0))
+
+
+def test_slo_objective_off_is_bit_identical():
+    """objective='geomean' (and the default) must not perturb the sweep."""
+    from repro.core.dse import run_dse
+    grid, wl, cfg = _quick_dse()
+    base = run_dse(grid, wl, cfg, use_sa=False)
+    explicit = run_dse(grid, wl, cfg, use_sa=False, objective="geomean")
+    assert [(p.arch.label(), p.objective, p.energy_j, p.delay_s)
+            for p in base] \
+        == [(p.arch.label(), p.objective, p.energy_j, p.delay_s)
+            for p in explicit]
+    assert all(p.slo is None for p in base)
+
+
+def test_fingerprint_obj_segment():
+    """Default fingerprint has no obj= segment (PR-7 checkpoints replay);
+    the slo objective stamps one BEFORE :wl= (realize header contract)."""
+    import dataclasses
+
+    from repro.core.explore import ExplorationEngine
+    grid, wl, cfg = _quick_dse()
+    with ExplorationEngine(wl, cfg) as eng:
+        fp = eng._fingerprint(True)
+    assert ":obj=" not in fp and ":wl=" in fp
+    slo_cfg = dataclasses.replace(cfg, objective="slo", traffic=SPEC)
+    with ExplorationEngine(wl, slo_cfg) as eng:
+        fp_slo = eng._fingerprint(True)
+    assert ":obj=slo(adhoc." in fp_slo
+    assert fp_slo.index(":obj=") < fp_slo.index(":wl=")
+    assert fp_slo.split(":wl=")[1] == fp.split(":wl=")[1]
+
+
+def test_slo_objective_requires_traffic():
+    from repro.core.dse import run_dse
+    grid, wl, cfg = _quick_dse()
+    with pytest.raises(ValueError, match="traffic"):
+        run_dse(grid[:2], wl, cfg, use_sa=False, objective="slo")
+
+
+def test_slo_objective_reranks_sa_grid():
+    """The acceptance recipe: with SA mappings the quick grid's (E, D)
+    ordering is not monotone in D, so the convex queueing tail re-ranks
+    candidates the geomean objective ordered the other way."""
+    from repro.core.dse import run_dse
+    grid, wl, cfg = _quick_dse()
+    traffic = "poisson:rate=71267.4,n=48,seed=0,plen=4..32,new=8..32"
+    base = run_dse(grid, wl, cfg, use_sa=True)
+    slo = run_dse(grid, wl, cfg, use_sa=True, objective="slo",
+                  traffic=traffic)
+    # same mappings, same physics: per-candidate (E, D) identical
+    assert sorted((p.arch.label(), p.energy_j, p.delay_s) for p in base) \
+        == sorted((p.arch.label(), p.energy_j, p.delay_s) for p in slo)
+    assert [p.arch.label() for p in base] != [p.arch.label() for p in slo]
+    for p in slo:
+        assert p.slo is not None
+        assert p.objective == pytest.approx(
+            p.mc * p.energy_j * p.slo[SLO_SCALAR_KEY])
+
+
+# ---------------------------------------------------------------------------
+# serve_loop redesign: queue/executor split + per-request timing
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    from repro.configs import get_config
+    from repro.models import model_api
+    cfg = get_config("smollm-135m").reduced().replace(
+        n_layers=2, d_model=64, vocab=256, d_ff=128)
+    params, _ = model_api(cfg).init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_request_queue_fifo_and_stamping():
+    from repro.runtime.serve_loop import Request, RequestQueue
+    q = RequestQueue()
+    for i in range(5):
+        q.submit(Request(rid=i, prompt=np.array([1], np.int32),
+                         enqueue_t=float(i + 1)))
+    q.submit(Request(rid=5, prompt=np.array([1], np.int32)))
+    assert q.pending[-1].enqueue_t > 0.0            # wall-clock stamped
+    assert [r.rid for r in q.next_wave(4)] == [0, 1, 2, 3]
+    assert len(q) == 2
+
+
+def test_model_executor_satisfies_protocol():
+    from repro.runtime.serve_loop import ModelWaveExecutor
+    cfg, params = _tiny_model()
+    ex = ModelWaveExecutor(cfg, params, max_batch=2, max_seq=64,
+                           cache_len=32)
+    assert isinstance(ex, WaveExecutor)
+    assert ex.cache_len == 32
+    trace = make_trace("poisson:rate=50,n=3,seed=0,plen=2..6,new=2..4",
+                       seed=0)
+    rep = replay(trace, ex, mode="wave")
+    assert len(rep.requests) == 3
+    for tl in rep.requests:
+        assert tl.finish_t >= tl.first_token_t >= tl.start_t
+
+
+def test_per_request_latency_differs_in_mixed_wave():
+    """Regression pin: the old API's shared wave-level latency is wrong."""
+    from repro.runtime.serve_loop import Request, Server
+    cfg, params = _tiny_model()
+    srv = Server(cfg, params, max_batch=4, max_seq=64, eos_id=-1)
+    rng = np.random.default_rng(0)
+    for i, budget in enumerate((2, 9, 16)):        # one mixed-length wave
+        srv.submit(Request(rid=i, prompt=rng.integers(
+            1, cfg.vocab, size=4).astype(np.int32), max_new=budget,
+            enqueue_t=1.0))
+    results = {r.rid: r for r in srv.run_until_empty()}
+    lats = [results[i].latency_s for i in range(3)]
+    assert len(set(lats)) == 3                     # not one shared number
+    assert lats == sorted(lats)                    # longer budget -> later
+    for r in results.values():
+        assert r.finish_t > r.start_t >= r.enqueue_t
+        assert r.latency_s == pytest.approx(r.finish_t - r.enqueue_t)
+
+
+def test_max_new_one_runs_zero_decode_steps():
+    """Done-mask fix: a max_new=1 wave never launches a decode step (the
+    old loop burned one and leaked a token past the budget)."""
+    from repro.runtime.serve_loop import ModelWaveExecutor, Request
+    cfg, params = _tiny_model()
+    ex = ModelWaveExecutor(cfg, params, max_batch=2, max_seq=64, eos_id=-1)
+    out, ntok, cost = ex.run_wave([Request(
+        rid=0, prompt=np.array([3, 4, 5], np.int32), max_new=1)])
+    assert cost.step_s == []                       # zero decode launches
+    assert ntok.tolist() == [1] and out.shape == (1, 1)
