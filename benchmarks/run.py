@@ -79,14 +79,18 @@ def migrate_bench_doc(doc: dict) -> dict:
 
 
 def _git_head(repo: Path) -> str:
-    import subprocess
     try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"], cwd=repo,
-            capture_output=True, text=True, timeout=10,
-        ).stdout.strip() or "unknown"
-    except Exception:
-        return "unknown"
+        from repro.obs.manifest import git_head
+        return git_head(repo)
+    except ImportError:
+        import subprocess
+        try:
+            return subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"], cwd=repo,
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip() or "unknown"
+        except Exception:
+            return "unknown"
 
 
 def write_bench_json(path: Path, quick: bool = False) -> None:

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _obs_metrics
 from .analyzer import (T_CORE_IN, T_CORE_MACS, T_CORE_TIME, T_DRAM,
                        T_DRAM_AM, T_EDGE, T_EDGE_AM, T_GLB, T_GLB_RW,
                        Analyzer, GroupAnalysis, router_grid)
@@ -50,6 +51,20 @@ def analysis_signature(arch: ArchConfig) -> Tuple:
     """
     return (arch.x_cores, arch.y_cores, arch.xcut, arch.ycut, arch.glb_kb,
             arch.macs_per_core, arch.freq_ghz, arch.n_dram, arch.tech)
+
+
+# Process-wide cache economics, summed over every CachedEvaluator this
+# process ever built (the per-instance hits/misses reset with each
+# candidate's evaluator; sweep-level rates need the union).  Plain-dict
+# increments on the hit path cost nanoseconds against a cache lookup and
+# keep the counters alive when instances are GC'd; the obs layer harvests
+# them through a collector, so REPRO_OBS never touches this path.
+CACHE_STATS: Dict[str, int] = {
+    "group_eval.hits": 0, "group_eval.misses": 0, "group_eval.evictions": 0,
+    "group_eval_fused.hits": 0, "group_eval_fused.misses": 0,
+    "group_eval_fused.evictions": 0,
+}
+_obs_metrics.register_collector(lambda: dict(CACHE_STATS))
 
 
 @dataclass
@@ -591,12 +606,15 @@ class CachedEvaluator(Evaluator):
         if hit is not None:
             self._cache.move_to_end(key)
             self.hits += 1
+            CACHE_STATS["group_eval.hits"] += 1
             return hit
         self.misses += 1
+        CACHE_STATS["group_eval.misses"] += 1
         out = super().eval_group(group, lms, total_batch)
         self._cache[key] = out
         if len(self._cache) > self.maxsize:
             self._cache.popitem(last=False)
+            CACHE_STATS["group_eval.evictions"] += 1
         return out
 
     def eval_groups_batched(self, requests: Sequence[Tuple[LayerGroup, LMS]],
@@ -609,6 +627,7 @@ class CachedEvaluator(Evaluator):
         (``backend="jax"``) results resolve against a separate cache —
         parity-grade values never leak into exact-path lookups."""
         cache = self._fused_cache if backend == "jax" else self._cache
+        stats = "group_eval_fused" if backend == "jax" else "group_eval"
         keys = [(grp.names, grp.batch_unit, lms.cache_key(), total_batch)
                 for grp, lms in requests]
         out: List[Optional[Tuple[GroupEval, GroupAnalysis]]] \
@@ -616,20 +635,24 @@ class CachedEvaluator(Evaluator):
         fresh: Dict[Tuple, Tuple[GroupEval, GroupAnalysis]] = {}
         miss_reqs: List[Tuple[LayerGroup, LMS]] = []
         miss_keys: List[Tuple] = []
+        n_hits = 0
         for i, key in enumerate(keys):
             hit = cache.get(key)
             if hit is not None:
                 cache.move_to_end(key)
-                self.hits += 1
+                n_hits += 1
                 out[i] = hit
             elif key not in fresh:
                 fresh[key] = None          # claimed; filled below
                 miss_reqs.append(requests[i])
                 miss_keys.append(key)
             else:
-                self.hits += 1             # duplicate of an in-batch miss
+                n_hits += 1                # duplicate of an in-batch miss
+        self.hits += n_hits
+        CACHE_STATS[stats + ".hits"] += n_hits
         if miss_reqs:
             self.misses += len(miss_reqs)
+            CACHE_STATS[stats + ".misses"] += len(miss_reqs)
             for key, res in zip(miss_keys,
                                 self.eval_requests_batch(miss_reqs,
                                                          total_batch,
@@ -638,6 +661,7 @@ class CachedEvaluator(Evaluator):
                 cache[key] = res
                 if len(cache) > self.maxsize:
                     cache.popitem(last=False)
+                    CACHE_STATS[stats + ".evictions"] += 1
         for i, key in enumerate(keys):
             if out[i] is None:
                 out[i] = fresh[key]

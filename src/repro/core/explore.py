@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import json
 import math
+import os as _os
+import time as _time
 from collections import OrderedDict
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import dataclass, field
@@ -53,6 +55,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from .. import obs as _obs
 from .encoding import LMS, MS
 from .evaluator import (CachedEvaluator, Evaluator, analysis_signature,
                         evaluator_for)
@@ -199,6 +202,23 @@ def replica_exchange_sa(g: Graph, arch: ArchConfig,
     res.proposed = sum(c.proposed for c in chains)
     res.swap_attempts = swap_attempts
     res.swap_accepts = swap_accepts
+    if _obs.enabled():
+        # once per SA run, strictly after the result is fixed: the obs
+        # layer observes counters the chains already kept, it never adds
+        # RNG draws or float ops to the trajectory (bit-identity contract)
+        m = _obs.metrics
+        m.counter("sa.runs").inc()
+        m.counter("sa.proposed").inc(res.proposed)
+        m.counter("sa.accepted").inc(res.accepted)
+        m.counter("sa.swap_attempts").inc(sum(swap_attempts))
+        m.counter("sa.swap_accepts").inc(sum(swap_accepts))
+        for c in chains:
+            if c.proposed:
+                m.histogram("sa.acceptance_rate").observe(
+                    c.accepted / c.proposed)
+        for a, s in zip(swap_attempts, swap_accepts):
+            if a:
+                m.histogram("sa.swap_rate").observe(s / a)
     return res
 
 
@@ -411,7 +431,7 @@ class ResumableSweep:
                 break
             n += 1
         self.path.replace(bak)
-        print(f"[sweep] previous file kept at {bak}")
+        _obs.vlog("sweep", f"previous file kept at {bak}")
 
     @classmethod
     def read(cls, path: Union[str, Path]) -> "ResumableSweep":
@@ -445,8 +465,8 @@ class ResumableSweep:
             except json.JSONDecodeError:
                 if i == len(lines) - 1:
                     continue                  # truncated final line: drop it
-                print(f"[sweep] {self.path}: corrupt line {i + 1}; "
-                      "discarding checkpoint")
+                _obs.vlog("sweep", f"{self.path}: corrupt line {i + 1}; "
+                          "discarding checkpoint")
                 if readonly:
                     continue                  # salvage what parses
                 self._records.clear()        # discard means ALL records
@@ -459,8 +479,8 @@ class ResumableSweep:
                         migrate = self._legacy[rec["_config"]]
                         saw_header = True
                         continue
-                    print(f"[sweep] {self.path}: config changed; "
-                          "discarding checkpoint")
+                    _obs.vlog("sweep", f"{self.path}: config changed; "
+                              "discarding checkpoint")
                     return False
                 saw_header = True
                 valid.append(line)
@@ -473,8 +493,8 @@ class ResumableSweep:
                 and self._records:
             # a fingerprinted sweep whose header is gone (e.g. killed while
             # writing it) can no longer prove the records match this config
-            print(f"[sweep] {self.path}: missing config header; "
-                  "discarding checkpoint")
+            _obs.vlog("sweep", f"{self.path}: missing config header; "
+                      "discarding checkpoint")
             self._records.clear()
             return False
         if migrate is not None and not readonly:
@@ -483,9 +503,9 @@ class ResumableSweep:
             for key, rec in old.items():
                 for k2, r2 in migrate(key, rec):
                     self._records[k2] = r2
-            print(f"[sweep] {self.path}: migrated {len(old)} legacy "
-                  f"records -> {len(self._records)} under the current "
-                  "schema")
+            _obs.vlog("sweep", f"{self.path}: migrated {len(old)} legacy "
+                      f"records -> {len(self._records)} under the current "
+                      "schema")
             self._rewrite()
             return True
         # a killed-mid-write trailing fragment (or missing final newline)
@@ -522,6 +542,19 @@ class ResumableSweep:
         self._records[key] = record
         with self.path.open("a") as f:
             f.write(json.dumps({"_key": key, **record}, default=float) + "\n")
+            f.flush()
+
+    def heartbeat(self, payload: Dict[str, Any]) -> None:
+        """Append a ``{"_hb": ...}`` liveness line (shard id, tasks
+        done/total, wall time — see ``ExplorationEngine``).
+
+        Heartbeats are *not* records: they carry no ``_key``, so
+        :meth:`_load`, :meth:`read` and :func:`merge_checkpoints` all skip
+        them (and any rewrite/merge drops them), while a multi-host driver
+        polling the file tail can tell a slow shard from a dead one.
+        """
+        with self.path.open("a") as f:
+            f.write(json.dumps({"_hb": payload}, default=float) + "\n")
             f.flush()
 
     def as_dict(self) -> Dict[str, Dict[str, Any]]:
@@ -607,7 +640,7 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
             fp, recs = _parse_checkpoint_shard(p)
         except (ValueError, OSError) as e:
             if verbose:
-                print(f"[merge] {p}: {e}; shard set aside")
+                _obs.vlog("merge", f"{p}: {e}; shard set aside")
             skipped.append((p, str(e)))
             continue
         parsed.append((p, fp, recs))
@@ -644,8 +677,12 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
         report.out = out
     if verbose:
         note = f" ({len(skipped)} shard(s) set aside)" if skipped else ""
-        print(f"[merge] {len(records)} records from {len(report.merged)} "
-              f"shard(s){' -> ' + str(out) if out is not None else ''}{note}")
+        _obs.vlog(
+            "merge",
+            f"{len(records)} records from {len(report.merged)} "
+            f"shard(s){' -> ' + str(out) if out is not None else ''}{note}",
+            n_records=len(records), n_shards=len(report.merged),
+            n_skipped=len(skipped))
     return report
 
 
@@ -735,20 +772,36 @@ def pareto_frontier(points: Sequence["_dse.DSEPoint"],
 _WORKER_STATE: Dict[str, Any] = {}
 
 
-def _worker_init(workloads: Dict[str, Graph], cfg: "_dse.DSEConfig") -> None:
+def _worker_init(workloads: Dict[str, Graph], cfg: "_dse.DSEConfig",
+                 obs_state: Optional[Dict[str, Any]] = None) -> None:
     _WORKER_STATE["workloads"] = workloads
     _WORKER_STATE["cfg"] = cfg
+    # spawned workers don't inherit a programmatic obs.enable(); the
+    # parent ships its switch + run dir through the initializer so worker
+    # trace streams land in the same run directory
+    _obs.import_state(obs_state)
 
 
 def _worker_eval(task: Tuple[int, int, ArchConfig, str, int, bool]
-                 ) -> Tuple[int, int, "_dse.TaskResult"]:
+                 ) -> Tuple[int, int, "_dse.TaskResult",
+                            Optional[Dict[str, Any]]]:
     ci, wi, arch, wl_name, seed, use_sa = task
+    obs_on = _obs.enabled()
+    t_start = _time.time() if obs_on else 0.0
     cfg = _WORKER_STATE["cfg"]
     tr = _dse.evaluate_task(arch, _WORKER_STATE["workloads"][wl_name], cfg,
                             use_sa=use_sa, seed=seed)
     if not cfg.keep_mappings:
         tr.mapping = None       # don't pickle mappings nobody asked for
-    return ci, wi, tr
+    payload: Optional[Dict[str, Any]] = None
+    if obs_on:
+        # piggyback this worker's metrics delta on the result: counters +
+        # collector harvest since the previous task, plus wall-clock task
+        # bounds the parent turns into queue-wait/wall-time telemetry
+        _obs.flush()
+        payload = {"pid": _os.getpid(), "t_start": t_start,
+                   "t_end": _time.time(), "metrics": _obs.metrics.drain()}
+    return ci, wi, tr, payload
 
 
 # ---------------------------------------------------------------------------
@@ -778,7 +831,9 @@ class ExplorationEngine:
     def __init__(self, workloads: Dict[str, Graph], cfg: "_dse.DSEConfig",
                  n_workers: int = 1, checkpoint: Union[str, Path, None] = None,
                  progress: bool = False, mp_context: str = "spawn",
-                 batched_screen: bool = True):
+                 batched_screen: bool = True,
+                 verbosity: Optional[int] = None,
+                 hb_every: Optional[float] = None):
         self.workloads = dict(workloads)
         self._wl_names = sorted(self.workloads)
         self.cfg = cfg
@@ -811,6 +866,19 @@ class ExplorationEngine:
         # loop); False keeps the per-task path for A/B tests + benchmarks
         self.batched_screen = batched_screen
         self._pool: Optional[ProcessPoolExecutor] = None
+        # diagnostics verbosity: the kwarg overrides REPRO_VERBOSITY
+        # (default 1 — historical output); 0 silences the [stage] lines
+        self.verbosity = verbosity
+        # shard-heartbeat period in seconds (liveness lines in the
+        # checkpoint; see ResumableSweep.heartbeat).  None reads
+        # REPRO_HB_EVERY (default 15s); 0 emits one per completed task.
+        if hb_every is None:
+            try:
+                hb_every = float(_os.environ.get("REPRO_HB_EVERY", "15"))
+            except ValueError:
+                hb_every = 15.0
+        self.hb_every = hb_every
+        self._shard_label = "0/1"
         # screening scores of the last run() that screened (sorted best
         # first); lets callers report the screen stage without re-running it
         self.last_screen: Optional[List["_dse.DSEPoint"]] = None
@@ -837,8 +905,11 @@ class ExplorationEngine:
                 max_workers=self.n_workers,
                 mp_context=mp.get_context(self.mp_context),
                 initializer=_worker_init,
-                initargs=(self.workloads, self.cfg))
+                initargs=(self.workloads, self.cfg, _obs.export_state()))
         return self._pool
+
+    def _log(self, tag: str, msg: str, **fields: Any) -> None:
+        _obs.vlog(tag, msg, verbosity=self.verbosity, **fields)
 
     # -- fingerprint for checkpoint compatibility ----------------------
     def _fingerprint(self, use_sa: bool, schema: int = 2,
@@ -951,43 +1022,59 @@ class ExplorationEngine:
                 try:
                     results[(ci, wi)] = task_from_dict(rec)
                 except (KeyError, ValueError, TypeError) as e:
-                    print(f"[{stage}] checkpoint record for "
-                          f"{arch.label()} x {wl} unusable ({e}); "
-                          "recomputing")
+                    self._log(stage, f"checkpoint record for "
+                              f"{arch.label()} x {wl} unusable ({e}); "
+                              "recomputing")
             if n_nomap:
-                print(f"[{stage}] {n_nomap} checkpointed tasks lack "
-                      "serialized mappings (metrics-only records, "
-                      "keep_mappings sweep); recomputing them")
+                self._log(stage, f"{n_nomap} checkpointed tasks lack "
+                          "serialized mappings (metrics-only records, "
+                          "keep_mappings sweep); recomputing them")
             if results and self.progress:
-                print(f"[{stage}] resumed {len(results)}/{len(tasks)} "
-                      f"tasks from {sweep.path}", flush=True)
+                self._log(stage, f"resumed {len(results)}/{len(tasks)} "
+                          f"tasks from {sweep.path}")
+            _obs.metrics.counter("engine.tasks_resumed").inc(len(results))
         pending = [t for t in tasks if (t[0], t[1]) not in results]
         done_n = len(results)
+        t_stage0 = _time.time()
+        hb_last = t_stage0
 
         def _record(ci: int, wi: int, arch: ArchConfig, wl: str, seed: int,
                     tr: "_dse.TaskResult") -> None:
-            nonlocal done_n
+            nonlocal done_n, hb_last
             results[(ci, wi)] = tr
             done_n += 1
             if sweep is not None:
                 sweep.add(task_checkpoint_key(arch, wl),
                           task_to_dict(tr, arch, wl, seed, keep))
+                now = _time.time()
+                if now - hb_last >= self.hb_every:
+                    hb_last = now
+                    sweep.heartbeat({
+                        "shard": self._shard_label, "stage": stage,
+                        "done": done_n, "total": len(tasks),
+                        "wall_s": now - t_stage0, "t": now})
             if self.progress:
                 print(f"[{stage} {done_n}/{len(tasks)}] {arch.label()} "
                       f"x {wl} E={tr.energy_j:.3e}J D={tr.delay_s:.3e}s",
                       flush=True)
 
+        obs_on = _obs.enabled()
         if self.n_workers <= 1 or len(pending) <= 1:
             for ci, wi, arch, wl, seed in pending:
-                tr = _dse.evaluate_task(arch, self.workloads[wl], self.cfg,
-                                        use_sa=use_sa, seed=seed)
+                with _obs.span("task", arch=arch.label(), wl=wl,
+                               queue_s=0.0):
+                    tr = _dse.evaluate_task(arch, self.workloads[wl],
+                                            self.cfg, use_sa=use_sa,
+                                            seed=seed)
                 if not keep:
                     # mirror the worker path: results live for the whole
                     # sweep, so unrequested mappings must not accumulate
                     tr.mapping = None
+                _obs.metrics.counter("engine.tasks").inc()
                 _record(ci, wi, arch, wl, seed, tr)
         else:
             pool = self._get_pool()
+            submit_t = _time.time() if obs_on else 0.0
             futs = {pool.submit(_worker_eval, (*t, use_sa)): t
                     for t in pending}
             not_done = set(futs)
@@ -996,15 +1083,42 @@ class ExplorationEngine:
                     done, not_done = wait(not_done,
                                           return_when=FIRST_COMPLETED)
                     for fut in done:
-                        ci, wi, tr = fut.result()
+                        ci, wi, tr, payload = fut.result()
                         t = futs[fut]
+                        if obs_on and payload is not None:
+                            self._absorb_task_payload(t, payload, stage,
+                                                      submit_t)
                         _record(ci, wi, t[2], t[3], t[4], tr)
             except BaseException:
                 # surface the failure now, not after the queue drains
                 for fut in not_done:
                     fut.cancel()
                 raise
+            finally:
+                if obs_on:
+                    _obs.metrics.histogram("engine.pool_batch_s").observe(
+                        _time.time() - submit_t)
         return results
+
+    def _absorb_task_payload(self, task: _Task, payload: Dict[str, Any],
+                             stage: str, submit_t: float) -> None:
+        """Fold one worker's piggybacked telemetry into the parent: merge
+        its metrics delta, emit a ``task`` span on the worker's behalf
+        (wall-clock bounds measured in the worker; queue-wait derived from
+        the submit stamp), and feed the queue-wait/wall-time histograms."""
+        _obs.metrics.absorb(payload.get("metrics"))
+        _obs.metrics.counter("engine.tasks").inc()
+        t_start = float(payload.get("t_start", 0.0))
+        t_end = float(payload.get("t_end", t_start))
+        queue_s = max(0.0, t_start - submit_t)
+        dur = max(0.0, t_end - t_start)
+        _obs.metrics.histogram("engine.task_wall_s").observe(dur)
+        _obs.metrics.histogram("engine.queue_wait_s").observe(queue_s)
+        _obs.metrics.histogram("phase.task").observe(dur)
+        _obs.emit({"ev": "span", "name": "task",
+                   "pid": payload.get("pid"), "t0": t_start, "dur": dur,
+                   "attrs": {"arch": task[2].label(), "wl": task[3],
+                             "stage": stage, "queue_s": queue_s}})
 
     # -- batched T-Map screening ---------------------------------------
     def _screen_tasks(self, indexed: Sequence[Tuple[int, ArchConfig]]
@@ -1052,9 +1166,9 @@ class ExplorationEngine:
                         energy_j=float(e_c), delay_s=float(d_c),
                         mapping=mapping if keep else None)
         if self.progress:
-            print(f"[screen] batched: {len(indexed)} candidates x "
-                  f"{len(self._wl_names)} workloads in {n_sigs} "
-                  "signature group(s)", flush=True)
+            self._log("screen", f"batched: {len(indexed)} candidates x "
+                      f"{len(self._wl_names)} workloads in {n_sigs} "
+                      "signature group(s)")
         return results
 
     # -- public API ----------------------------------------------------
@@ -1064,17 +1178,30 @@ class ExplorationEngine:
         order* — for callers that reduce positionally (``joint_reuse_dse``)
         rather than rank by objective."""
         indexed = list(enumerate(archs))
-        results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
-                                  checkpoint=self.checkpoint, stage="map")
-        return self._reduce(indexed, results)
+        with _obs.span("map", n_archs=len(indexed)):
+            results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
+                                      checkpoint=self.checkpoint,
+                                      stage="map")
+            out = self._reduce(indexed, results)
+        self._finalize_obs()
+        return out
 
     def screen(self, candidates: Sequence[ArchConfig]
                ) -> List["_dse.DSEPoint"]:
         """T-Map-only scoring pass (no SA), sorted best-objective first."""
         indexed = list(enumerate(candidates))
-        results = self._screen_tasks(indexed)
+        with _obs.span("screen", n_candidates=len(indexed)):
+            results = self._screen_tasks(indexed)
         return sorted(self._reduce(indexed, results),
                       key=lambda p: p.objective)
+
+    def _finalize_obs(self) -> None:
+        """Land the metrics snapshot + flush trace buffers (no-op while
+        disabled); called at the end of every public sweep entry point so
+        a killed-later process still leaves a parseable run dir."""
+        if _obs.enabled():
+            _obs.metrics.write_snapshot()
+            _obs.flush()
 
     def run(self, candidates: Sequence[ArchConfig], use_sa: bool = True,
             screen_keep: Union[float, str] = 1.0,
@@ -1109,8 +1236,18 @@ class ExplorationEngine:
         si, sn = shard
         if sn < 1 or not 0 <= si < sn:
             raise ValueError(f"bad shard {si}/{sn}: need 0 <= i < n")
+        self._shard_label = f"{si}/{sn}"
         indexed = list(enumerate(candidates))
         self.last_screen = None
+        if _obs.enabled():
+            _obs.manifest.write_manifest({
+                "stage": "run", "fingerprint": self._fingerprint(use_sa),
+                "seed": self.cfg.sa.seed, "grid": len(candidates),
+                "n_workloads": len(self._wl_names),
+                "shard": self._shard_label, "n_workers": self.n_workers,
+                "screen_keep": screen_keep,
+                "checkpoint": (str(self.checkpoint)
+                               if self.checkpoint is not None else None)})
         if use_sa and screen_keep == "auto" and len(candidates) > 1:
             if sn > 1:
                 raise ValueError(
@@ -1126,8 +1263,9 @@ class ExplorationEngine:
                 f"screen_keep must be a fraction or 'auto', "
                 f"got {screen_keep!r}")
         if use_sa and screen_keep < 1.0 and len(candidates) > 1:
-            screen_results = self._screen_tasks(indexed)
-            screen_pts = self._reduce(indexed, screen_results)
+            with _obs.span("screen", n_candidates=len(indexed)):
+                screen_results = self._screen_tasks(indexed)
+                screen_pts = self._reduce(indexed, screen_results)
             order = sorted(range(len(indexed)),
                            key=lambda i: screen_pts[i].objective)
             # epsilon guard: fraction-derived keeps like 6/n can float up
@@ -1135,20 +1273,27 @@ class ExplorationEngine:
             keep = max(1, min(len(indexed),
                               math.ceil(screen_keep * len(indexed) - 1e-9)))
             kept = sorted(order[:keep])
-            print(f"[explore] screening kept {keep}/{len(indexed)} "
-                  f"candidates (pruned {len(indexed) - keep})", flush=True)
+            self._log("explore", f"screening kept {keep}/{len(indexed)} "
+                      f"candidates (pruned {len(indexed) - keep})")
+            _obs.metrics.counter("screen.kept").inc(keep)
+            _obs.metrics.counter("screen.pruned").inc(len(indexed) - keep)
             self.last_screen = [screen_pts[i] for i in order]
             indexed = [indexed[i] for i in kept]
         if sn > 1:
             mine = [(ci, arch) for ci, arch in indexed if ci % sn == si]
-            print(f"[explore] shard {si}/{sn}: {len(mine)}/{len(indexed)} "
-                  f"candidates ({len(mine) * len(self._wl_names)} tasks)",
-                  flush=True)
+            self._log("explore",
+                      f"shard {si}/{sn}: {len(mine)}/{len(indexed)} "
+                      f"candidates ({len(mine) * len(self._wl_names)} tasks)")
             indexed = mine
-        results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
-                                  checkpoint=self.checkpoint, stage="dse")
-        return sorted(self._reduce(indexed, results),
-                      key=lambda p: p.objective)
+        with _obs.span("dse", shard=self._shard_label,
+                       n_candidates=len(indexed)):
+            results = self._map_tasks(self._tasks(indexed), use_sa=use_sa,
+                                      checkpoint=self.checkpoint,
+                                      stage="dse")
+            out = sorted(self._reduce(indexed, results),
+                         key=lambda p: p.objective)
+        self._finalize_obs()
+        return out
 
     def _run_adaptive(self, indexed: List[Tuple[int, ArchConfig]]
                       ) -> List["_dse.DSEPoint"]:
@@ -1194,9 +1339,13 @@ class ExplorationEngine:
             pt = self._reduce([(ci, arch)], res)[0]
             gain_max = max(gain_max, math.log(screen_pts[oi].objective)
                            - math.log(pt.objective))
-        print(f"[explore] adaptive screening kept {len(kept)}/{len(indexed)}"
-              f" candidates (largest SA gain {gain_max:.3g} in "
-              f"log-objective; pruned {len(indexed) - len(kept)})",
-              flush=True)
-        return sorted(self._reduce(sorted(kept), results),
-                      key=lambda p: p.objective)
+        self._log("explore",
+                  f"adaptive screening kept {len(kept)}/{len(indexed)}"
+                  f" candidates (largest SA gain {gain_max:.3g} in "
+                  f"log-objective; pruned {len(indexed) - len(kept)})")
+        _obs.metrics.counter("screen.kept").inc(len(kept))
+        _obs.metrics.counter("screen.pruned").inc(len(indexed) - len(kept))
+        out = sorted(self._reduce(sorted(kept), results),
+                     key=lambda p: p.objective)
+        self._finalize_obs()
+        return out

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
 from .encoding import (LMS, MS, factor_parts, space_size_lower_bound)
 from .evaluator import CachedEvaluator, Evaluator, GroupEval
 from .hw import ArchConfig
@@ -466,4 +467,12 @@ def _sa_chain(g: Graph, arch: ArchConfig, groups: Sequence[LayerGroup],
         # not on how many proposals happened to be applicable
         if cfg.log_every and it % cfg.log_every == 0:
             history.append(chain.cost)
-    return chain.finalize(history)
+    res = chain.finalize(history)
+    if _obs.enabled():                     # once per SA run, post-result
+        _obs.metrics.counter("sa.runs").inc()
+        _obs.metrics.counter("sa.proposed").inc(res.proposed)
+        _obs.metrics.counter("sa.accepted").inc(res.accepted)
+        if res.proposed:
+            _obs.metrics.histogram("sa.acceptance_rate").observe(
+                res.accepted / res.proposed)
+    return res

@@ -1,0 +1,27 @@
+"""Structured telemetry for the DSE/serve stack (``REPRO_OBS=1``).
+
+Three pillars (see DESIGN.md "Observability"):
+
+* :mod:`repro.obs.trace` — span tracer + structured ``vlog`` logging,
+  append-only JSONL event stream per process;
+* :mod:`repro.obs.metrics` — counters/gauges/histograms + collector
+  harvest of the engine's native cache counters, worker payloads
+  piggybacked on task results;
+* :mod:`repro.obs.manifest` / :mod:`repro.obs.report` — per-run manifest
+  and the ``launch/obs_report.py`` sweep post-mortem.
+
+Telemetry never draws randomness and never reorders float math: sweeps
+are bit-identical with tracing on or off, and the disabled path is a
+bool check.
+"""
+
+from . import manifest, metrics  # noqa: F401
+from .trace import (disable, emit, enable, enabled, export_state, flush,
+                    import_state, run_dir, set_verbosity, span, timed,
+                    verbosity, vlog)
+
+__all__ = [
+    "disable", "emit", "enable", "enabled", "export_state", "flush",
+    "import_state", "manifest", "metrics", "run_dir", "set_verbosity",
+    "span", "timed", "verbosity", "vlog",
+]

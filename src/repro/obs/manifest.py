@@ -1,0 +1,88 @@
+"""Per-run manifests: config fingerprint + seed + grid + provenance.
+
+The provenance block mirrors ``bench_dse/v2`` (``benchmarks/run.py``) —
+cpu count, platform, python, jax, short git commit, UTC date — so a sweep
+trace and a bench trajectory row measured in the same container are
+directly comparable.  :func:`git_head` is the shared commit-stamp helper:
+``git rev-parse --short HEAD`` with a ``REPRO_GIT_COMMIT`` env override
+for containers that ship the tree without ``.git`` (the bench
+trajectory's ``"commit": "unknown"`` failure mode).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Union
+
+from . import trace as _trace
+
+GIT_COMMIT_ENV = "REPRO_GIT_COMMIT"
+
+
+def git_head(repo: Union[str, Path, None] = None) -> str:
+    """Short HEAD commit of ``repo`` (default: this package's tree).
+
+    Resolution order: the ``REPRO_GIT_COMMIT`` env override (gitless
+    containers stamp their build commit through it), then ``git
+    rev-parse --short HEAD``, then ``"unknown"``.
+    """
+    override = os.environ.get(GIT_COMMIT_ENV)
+    if override:
+        return override
+    import subprocess
+    if repo is None:
+        repo = Path(__file__).resolve().parents[3]
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=repo,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def provenance(repo: Union[str, Path, None] = None) -> Dict[str, Any]:
+    """The bench_dse/v2-shaped provenance block + commit/date stamps."""
+    import os as _os
+    import platform as _platform
+    import sys as _sys
+    from datetime import datetime, timezone
+    try:
+        import jax
+        jax_ver = getattr(jax, "__version__", None)
+    except Exception:
+        jax_ver = None
+    return {
+        "cpu_count": _os.cpu_count(),
+        "platform": _platform.platform(),
+        "python": _sys.version.split()[0],
+        "jax": jax_ver,
+        "commit": git_head(repo),
+        "date": datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+    }
+
+
+def write_manifest(fields: Dict[str, Any],
+                   directory: Union[str, Path, None] = None,
+                   ) -> Optional[Path]:
+    """Write ``manifest.json`` into the run dir (no-op while disabled
+    unless an explicit ``directory`` is given).  ``fields`` comes from the
+    caller (fingerprint, seed, grid size, shard, worker count, ...);
+    provenance is stamped here.  Last write wins — a process running
+    several sweeps into one run dir keeps the most recent manifest, and
+    each sweep's start is also visible as a ``log`` event in the trace.
+    """
+    if directory is None:
+        d = _trace.run_dir()
+        if d is None:
+            return None
+    else:
+        d = Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+    doc = {"schema": "obs_manifest/v1", "provenance": provenance(), **fields}
+    path = d / "manifest.json"
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True,
+                               default=str) + "\n")
+    return path

@@ -40,6 +40,7 @@ from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
 from ..core.evaluator import evaluator_for
 from ..core.workload import dense_twin
 from ..launch.hlo_analysis import analyze_hlo_text
@@ -178,37 +179,44 @@ def measure_candidate(cand: RealizeCandidate, prog: RealizedProgram,
     ev_dense = ev if twin is cand.graph else evaluator_for(cand.arch, twin)
     reports: List[StageReport] = []
     for sp, (grp, lms) in zip(prog.stages, cand.mapping):
-        if sp.compiled is None:
-            sp.lower_and_compile()
-        # total_batch = batch_unit: ONE pipeline pass, with weight loads
-        # unamortized — exactly what the realized stage executes
-        pred = ev.traffic_summary(grp, lms, grp.batch_unit)
-        meas = _measure_stage(sp)
-        esc: Dict[str, float] = {}
-        if ev_dense is not ev:
-            dense = ev_dense.traffic_summary(grp, lms, grp.batch_unit)
-            esc = {k: (pred[k] / dense[k]) if dense[k] > 0 else 1.0
-                   for k in ("flops", "dram_bytes", "noc_bytes",
-                             "d2d_bytes")}
-            meas["flops"] *= esc["flops"]
-            meas["hbm_bytes"] *= esc["dram_bytes"]
-            meas["ici_bytes"] *= esc["noc_bytes"]
-        reports.append(StageReport(
-            index=sp.index, layers=sp.stage.layers, n_devices=sp.n_devices,
-            routes=dict(sp.routes),
-            flops=meas["flops"], hbm_bytes=meas["hbm_bytes"],
-            ici_bytes=meas["ici_bytes"], coll_by_kind=meas["coll_by_kind"],
-            temp_bytes=meas["temp_bytes"], arg_bytes=meas["arg_bytes"],
-            compile_s=sp.compile_s,
-            pred_flops=pred["flops"],
-            pred_dram_bytes=pred["dram_bytes"],
-            pred_noc_bytes=pred["noc_bytes"],
-            pred_d2d_bytes=pred["d2d_bytes"],
-            pred_delay_s=pred["delay_s"], pred_energy_j=pred["energy_j"],
-            pred_glb_overflow=pred["glb_overflow_bytes"],
-            expected_scale=esc))
+        with _obs.span("realize.measure_stage", key=cand.key,
+                       stage=sp.index, n_devices=sp.n_devices):
+            if sp.compiled is None:
+                sp.lower_and_compile()
+            # total_batch = batch_unit: ONE pipeline pass, with weight
+            # loads unamortized — exactly what the realized stage executes
+            pred = ev.traffic_summary(grp, lms, grp.batch_unit)
+            meas = _measure_stage(sp)
+            esc: Dict[str, float] = {}
+            if ev_dense is not ev:
+                dense = ev_dense.traffic_summary(grp, lms, grp.batch_unit)
+                esc = {k: (pred[k] / dense[k]) if dense[k] > 0 else 1.0
+                       for k in ("flops", "dram_bytes", "noc_bytes",
+                                 "d2d_bytes")}
+                meas["flops"] *= esc["flops"]
+                meas["hbm_bytes"] *= esc["dram_bytes"]
+                meas["ici_bytes"] *= esc["noc_bytes"]
+            reports.append(StageReport(
+                index=sp.index, layers=sp.stage.layers,
+                n_devices=sp.n_devices,
+                routes=dict(sp.routes),
+                flops=meas["flops"], hbm_bytes=meas["hbm_bytes"],
+                ici_bytes=meas["ici_bytes"],
+                coll_by_kind=meas["coll_by_kind"],
+                temp_bytes=meas["temp_bytes"], arg_bytes=meas["arg_bytes"],
+                compile_s=sp.compile_s,
+                pred_flops=pred["flops"],
+                pred_dram_bytes=pred["dram_bytes"],
+                pred_noc_bytes=pred["noc_bytes"],
+                pred_d2d_bytes=pred["d2d_bytes"],
+                pred_delay_s=pred["delay_s"],
+                pred_energy_j=pred["energy_j"],
+                pred_glb_overflow=pred["glb_overflow_bytes"],
+                expected_scale=esc))
     if execute:
-        run = prog.execute(seed=seed)
+        with _obs.span("realize.execute", key=cand.key,
+                       n_stages=len(reports)):
+            run = prog.execute(seed=seed)
         for sr, wall, dci in zip(reports, run["wall_s"], run["dci_bytes"]):
             sr.wall_s = wall
             sr.dci_bytes = float(dci) * sr.expected_scale.get("d2d_bytes",

@@ -1,0 +1,290 @@
+"""Telemetry layer: bit-identity with tracing on, worker metric
+aggregation, heartbeat survival across resume/merge, report golden
+output, vlog verbosity, provenance override."""
+
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.core.dse import DSEConfig, grid_candidates, run_dse
+from repro.core.explore import (ExplorationEngine, ResumableSweep,
+                                merge_checkpoints)
+from repro.core.sa import SAConfig
+from repro.core.workloads import transformer
+from repro.obs.manifest import GIT_COMMIT_ENV, git_head
+from repro.obs.report import parse_heartbeats, render_report, shard_progress
+
+DATA = Path(__file__).parent / "data" / "obs_mini"
+
+
+def _tf_small():
+    return transformer(n_layers=2, d_model=128, d_ff=256, seq=64, name="tf-s")
+
+
+def _grid(n=4):
+    cands = grid_candidates(
+        72.0, mac_options=(512, 1024), cut_options=(1, 2),
+        dram_per_tops=(2.0,), noc_options=(16,), d2d_ratio=(0.5,),
+        glb_options=(1024,))
+    return cands[:n]
+
+
+def _cfg(iters=40, seed=3):
+    return DSEConfig(batch=8, sa=SAConfig(iters=iters, seed=seed))
+
+
+def _sig(points):
+    return [(p.arch, p.objective, p.energy_j, p.delay_s) for p in points]
+
+
+@pytest.fixture
+def obs_dir(tmp_path):
+    """Enable tracing into a temp run dir; always restore global state."""
+    d = tmp_path / "obs"
+    obs.enable(d)
+    yield d
+    obs.disable()
+    obs.metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: tracing on == tracing off
+# ---------------------------------------------------------------------------
+
+def test_run_dse_bit_identical_with_tracing(tmp_path):
+    g = _tf_small()
+    cands = _grid()
+    cfg = _cfg()
+    off = run_dse(cands, {"TF": g}, cfg)
+    d = tmp_path / "obs"
+    obs.enable(d)
+    try:
+        on = run_dse(cands, {"TF": g}, cfg, n_workers=2)
+    finally:
+        obs.disable()
+        obs.metrics.reset()
+    assert _sig(off) == _sig(on)
+    # artifacts exist and every trace line is valid JSON
+    assert (d / "manifest.json").exists()
+    assert (d / "metrics.json").exists()
+    traces = sorted(d.glob("trace-*.jsonl"))
+    assert traces
+    for tf in traces:
+        for line in tf.read_text().splitlines():
+            json.loads(line)
+    man = json.loads((d / "manifest.json").read_text())
+    assert man["schema"] == "obs_manifest/v1"
+    assert man["seed"] == cfg.sa.seed
+    m = json.loads((d / "metrics.json").read_text())
+    assert m["counters"]["engine.tasks"] == len(off)   # one workload
+
+
+def test_sharded_sweep_bit_identical_with_tracing(tmp_path, obs_dir):
+    g = _tf_small()
+    cands = _grid()
+    cfg = _cfg()
+    obs.disable()
+    full = run_dse(cands, {"TF": g}, cfg)
+    obs.enable(obs_dir)
+    shards = []
+    for i in range(2):
+        ck = tmp_path / f"shard{i}.jsonl"
+        run_dse(cands, {"TF": g}, cfg, shard=(i, 2), checkpoint=ck)
+        shards.append(ck)
+    merged = tmp_path / "merged.jsonl"
+    merge_checkpoints(shards, merged)
+    resumed = run_dse(cands, {"TF": g}, cfg, checkpoint=merged)
+    assert _sig(full) == _sig(resumed)
+
+
+def test_disabled_metrics_are_noops():
+    assert not obs.enabled()
+    c = obs.metrics.counter("test.noop_counter")
+    v0 = c.value
+    c.inc()
+    c.inc(5)
+    assert c.value == v0
+    h = obs.metrics.histogram("test.noop_hist")
+    h.observe(1.0)
+    assert h.n == 0
+    g = obs.metrics.gauge("test.noop_gauge")
+    g.set(3.0)
+    assert g.value is None
+
+
+# ---------------------------------------------------------------------------
+# Worker metric aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_workers", [1, 4])
+def test_worker_metrics_aggregate_across_pool(tmp_path, n_workers):
+    g = _tf_small()
+    cands = _grid()
+    cfg = _cfg()
+    serial = run_dse(cands, {"TF": g}, cfg)
+    d = tmp_path / f"obs-w{n_workers}"
+    obs.enable(d)
+    try:
+        pts = run_dse(cands, {"TF": g}, cfg, n_workers=n_workers)
+        snap = obs.metrics.snapshot()
+    finally:
+        obs.disable()
+        obs.metrics.reset()
+    assert _sig(pts) == _sig(serial)
+    n_tasks = len(cands) * 1          # one workload
+    assert snap["counters"]["engine.tasks"] == n_tasks
+    # SA stats travelled back from the workers (one SA run per task)
+    assert snap["counters"]["sa.runs"] == n_tasks
+    assert snap["counters"]["sa.proposed"] > 0
+    # task wall-time histogram saw every task exactly once
+    assert snap["histograms"]["phase.task"]["n"] == n_tasks
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats
+# ---------------------------------------------------------------------------
+
+def test_heartbeats_written_and_ignored_by_reader(tmp_path):
+    g = _tf_small()
+    cands = _grid()
+    ck = tmp_path / "hb.jsonl"
+    with ExplorationEngine({"TF": g}, _cfg(), checkpoint=ck,
+                           hb_every=0.0) as eng:
+        pts = eng.run(cands)
+    lines = [json.loads(x) for x in ck.read_text().splitlines()]
+    hbs = [x["_hb"] for x in lines if "_hb" in x]
+    recs = [x for x in lines if "_key" in x]
+    assert hbs, "hb_every=0 should heartbeat after every record"
+    assert len(recs) == len(pts)
+    last = hbs[-1]
+    assert last["done"] == last["total"] == len(pts)
+    assert last["shard"] == "0/1"
+    assert last["wall_s"] >= 0 and last["t"] > 0
+    # the record parser skips heartbeat lines
+    sweep = ResumableSweep.read(ck)
+    assert len(sweep) == len(pts)
+
+
+def test_heartbeats_survive_resume_and_merge(tmp_path):
+    g = _tf_small()
+    cands = _grid()
+    cfg = _cfg()
+    shards = []
+    for i in range(2):
+        ck = tmp_path / f"s{i}.jsonl"
+        with ExplorationEngine({"TF": g}, cfg, checkpoint=ck,
+                               hb_every=0.0) as eng:
+            eng.run(cands, shard=(i, 2))
+        shards.append(ck)
+        n_rec, hb = parse_heartbeats(ck)
+        assert hb is not None and hb["done"] == n_rec
+    # resume on top of a heartbeat-bearing checkpoint: all tasks skip
+    with ExplorationEngine({"TF": g}, cfg, checkpoint=shards[0],
+                           hb_every=0.0) as eng:
+        eng.run(cands, shard=(0, 2))
+    # merge drops heartbeat lines but keeps every record
+    merged = tmp_path / "merged.jsonl"
+    merge_checkpoints(shards, merged)
+    mlines = [json.loads(x) for x in merged.read_text().splitlines()]
+    assert not any("_hb" in x for x in mlines)
+    assert len([x for x in mlines if "_key" in x]) == \
+        sum(parse_heartbeats(s)[0] for s in shards)
+    full = run_dse(cands, {"TF": g}, cfg)
+    resumed = run_dse(cands, {"TF": g}, cfg, checkpoint=merged)
+    assert _sig(full) == _sig(resumed)
+
+
+def test_shard_progress_rows(tmp_path):
+    ck = tmp_path / "p.jsonl"
+    ck.write_text(
+        json.dumps({"_config": "x"}) + "\n" +
+        json.dumps({"_key": "a", "e": 1}) + "\n" +
+        json.dumps({"_hb": {"shard": "1/4", "done": 1, "total": 3,
+                            "wall_s": 2.5, "t": 100.0}}) + "\n")
+    rows = shard_progress([ck], now=110.0)
+    assert rows == [{"shard": "1/4", "records": 1, "done": 1, "total": 3,
+                     "wall_s": 2.5, "hb_age_s": 10.0}]
+
+
+# ---------------------------------------------------------------------------
+# Report golden output
+# ---------------------------------------------------------------------------
+
+def test_obs_report_golden():
+    got = render_report(run=DATA / "run",
+                        ckpts=[DATA / "shard0.jsonl"],
+                        top=5, now=1786177000.0)
+    want = (DATA / "report.txt").read_text()
+    assert got == want
+
+
+def test_obs_report_cli(capsys):
+    from repro.launch.obs_report import main
+    rc = main(["--run", str(DATA / "run"),
+               "--ckpt", str(DATA / "shard0.jsonl")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "== run manifest ==" in out
+    assert "== shard progress ==" in out
+    assert "== Pareto snapshot" in out
+
+
+def test_obs_report_empty_inputs(tmp_path):
+    txt = render_report(run=tmp_path)
+    assert "no obs artifacts" in txt
+
+
+# ---------------------------------------------------------------------------
+# vlog verbosity + provenance
+# ---------------------------------------------------------------------------
+
+def test_vlog_verbosity_gating(capsys, obs_dir):
+    obs.vlog("sweep", "visible", level=1)
+    obs.vlog("sweep", "hidden", level=2)
+    out = capsys.readouterr().out
+    assert "[sweep] visible" in out
+    assert "hidden" not in out
+    obs.set_verbosity(2)
+    try:
+        obs.vlog("sweep", "now-visible", level=2)
+        obs.vlog("sweep", "kwarg-hidden", level=2, verbosity=0)
+    finally:
+        obs.set_verbosity(1)
+    out = capsys.readouterr().out
+    assert "now-visible" in out
+    assert "kwarg-hidden" not in out
+    obs.flush()
+    logs = []
+    for tf in Path(obs_dir).glob("trace-*.jsonl"):
+        for line in tf.read_text().splitlines():
+            ev = json.loads(line)
+            if ev.get("ev") == "log":
+                logs.append(ev["msg"])
+    # every vlog call lands in the trace, printed or not
+    for msg in ("visible", "hidden", "now-visible", "kwarg-hidden"):
+        assert msg in logs
+
+
+def test_git_head_env_override(monkeypatch):
+    monkeypatch.setenv(GIT_COMMIT_ENV, "cafef00d")
+    assert git_head() == "cafef00d"
+    monkeypatch.delenv(GIT_COMMIT_ENV)
+    head = git_head(Path(__file__).resolve().parents[1])
+    assert head and head != "unknown"
+
+
+def test_bench_git_head_delegates(monkeypatch):
+    import importlib
+    run_mod = importlib.import_module("benchmarks.run")
+    monkeypatch.setenv(GIT_COMMIT_ENV, "beadfeed")
+    assert run_mod._git_head(Path(".")) == "beadfeed"
+
+
+def test_manifest_write_noop_when_disabled(tmp_path):
+    assert not obs.enabled()
+    assert obs.manifest.write_manifest({"stage": "x"}) is None
+    p = obs.manifest.write_manifest({"stage": "x"}, directory=tmp_path)
+    assert p is not None and json.loads(p.read_text())["stage"] == "x"
