@@ -248,7 +248,9 @@ def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
             shard: Tuple[int, int] = (0, 1),
             mp_context: str = "spawn",
             objective: Optional[str] = None,
-            traffic: Optional[object] = None) -> List[DSEPoint]:
+            traffic: Optional[object] = None,
+            indices: Optional[Sequence[int]] = None,
+            shard_label: Optional[str] = None) -> List[DSEPoint]:
     """Sweep ``candidates``; thin wrapper over the exploration engine.
 
     * ``n_workers > 1`` fans (candidate x workload) tasks out over worker
@@ -270,6 +272,10 @@ def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
       the raw geomean delay (convenience overrides for
       ``cfg.objective``/``cfg.traffic``); left at ``None`` the sweep —
       and its checkpoint fingerprint — is untouched.
+    * ``indices=[...]`` evaluates exactly the listed global candidate
+      indices with no screening stage — the multi-host supervisor's
+      screen-once dispatch form (``shard_label`` names the shard in
+      heartbeats).  Mutually exclusive with stride ``shard``.
     """
     if objective is not None:
         cfg = replace(cfg, objective=objective)
@@ -279,7 +285,7 @@ def run_dse(candidates: Sequence[ArchConfig], workloads: Dict[str, Graph],
                                     checkpoint=checkpoint, progress=progress,
                                     mp_context=mp_context) as eng:
         return eng.run(candidates, use_sa=use_sa, screen_keep=screen_keep,
-                       shard=shard)
+                       shard=shard, indices=indices, shard_label=shard_label)
 
 
 def scaled_arch(base: ArchConfig, s: int) -> ArchConfig:

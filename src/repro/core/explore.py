@@ -381,6 +381,72 @@ def migrate_v1_record(key: str, rec: Dict[str, Any]
 # Resumable sweeps (JSON-lines checkpoint)
 # ---------------------------------------------------------------------------
 
+# checkpoint durability switch: records fsync on append and every atomic
+# rewrite fsyncs before rename (crash between write and rename can
+# otherwise lose the repair).  On by default; REPRO_CKPT_FSYNC=0 opts
+# hot single-host sweeps out of the per-record fsync cost.
+def _fsync_enabled() -> bool:
+    return _os.environ.get("REPRO_CKPT_FSYNC", "1").lower() not in (
+        "0", "false", "off", "no")
+
+
+def _fsync_file(f) -> None:
+    if not _fsync_enabled():
+        return
+    try:
+        _os.fsync(f.fileno())
+    except OSError:
+        pass
+
+
+def _replace_durable(dst: Path, text: str) -> None:
+    """Atomic replace that survives a crash at any point: write to a
+    sibling temp file, fsync it, rename over ``dst``, fsync the
+    directory (the rename itself must be on disk before we report the
+    repair/merge done)."""
+    tmp = dst.with_name(dst.name + ".tmp")
+    with tmp.open("w") as f:
+        f.write(text)
+        f.flush()
+        _fsync_file(f)
+    tmp.replace(dst)
+    if _fsync_enabled():
+        try:
+            dfd = _os.open(str(dst.parent), _os.O_RDONLY)
+            try:
+                _os.fsync(dfd)
+            finally:
+                _os.close(dfd)
+        except OSError:
+            pass
+
+
+def _hb_collision(lines: List[str], i: int) -> bool:
+    """Is corrupt line ``i`` attributable to a concurrent heartbeat
+    writer?
+
+    Task records have exactly one sanctioned class of concurrent
+    appender: heartbeat lines (a supervisor-era shard child heartbeats
+    the same file its task loop appends to, and a duplicate dispatch may
+    briefly share a file).  A torn line that carries an ``"_hb"`` marker
+    itself, or sits adjacent to a line that parses as a pure heartbeat,
+    is that collision: the damaged record halves are dropped (the
+    per-task seed gate recomputes them on resume) instead of poisoning
+    the whole checkpoint.
+    """
+    if '"_hb"' in lines[i]:
+        return True
+    for j in (i - 1, i + 1):
+        if 0 <= j < len(lines) and lines[j].strip():
+            try:
+                rec = json.loads(lines[j])
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict) and "_hb" in rec:
+                return True
+    return False
+
+
 class ResumableSweep:
     """Append-only JSON-lines checkpoint for long sweeps.
 
@@ -465,6 +531,13 @@ class ResumableSweep:
             except json.JSONDecodeError:
                 if i == len(lines) - 1:
                     continue                  # truncated final line: drop it
+                if _hb_collision(lines, i):
+                    # torn by a concurrent heartbeat writer: drop just the
+                    # damaged line(s); the repair rewrite below heals the
+                    # file and the seed gate recomputes the lost record
+                    _obs.vlog("sweep", f"{self.path}: line {i + 1} torn by "
+                              "a concurrent heartbeat writer; dropped")
+                    continue
                 _obs.vlog("sweep", f"{self.path}: corrupt line {i + 1}; "
                           "discarding checkpoint")
                 if readonly:
@@ -510,13 +583,11 @@ class ResumableSweep:
             return True
         # a killed-mid-write trailing fragment (or missing final newline)
         # would merge with the next append — repair the file first;
-        # atomically (temp + replace), so a second kill mid-repair cannot
-        # lose the already-recorded lines
+        # atomically (temp + fsync + replace), so a crash at any point
+        # mid-repair cannot lose the already-recorded lines
         repaired = "".join(v + "\n" for v in valid)
         if not readonly and repaired != text:
-            tmp = self.path.with_name(self.path.name + ".tmp")
-            tmp.write_text(repaired)
-            tmp.replace(self.path)
+            _replace_durable(self.path, repaired)
         return True
 
     def _rewrite(self) -> None:
@@ -525,9 +596,7 @@ class ResumableSweep:
                   if self.fingerprint is not None else "")
         body = "".join(json.dumps({"_key": k, **r}, default=float) + "\n"
                        for k, r in self._records.items())
-        tmp = self.path.with_name(self.path.name + ".tmp")
-        tmp.write_text(header + body)
-        tmp.replace(self.path)
+        _replace_durable(self.path, header + body)
 
     def __contains__(self, key: str) -> bool:
         return key in self._records
@@ -543,6 +612,10 @@ class ResumableSweep:
         with self.path.open("a") as f:
             f.write(json.dumps({"_key": key, **record}, default=float) + "\n")
             f.flush()
+            # records are the durable artifact: fsync before returning, so
+            # a host losing power right after a task completes never loses
+            # work the supervisor believes is checkpointed
+            _fsync_file(f)
 
     def heartbeat(self, payload: Dict[str, Any]) -> None:
         """Append a ``{"_hb": ...}`` liveness line (shard id, tasks
@@ -552,6 +625,8 @@ class ResumableSweep:
         :meth:`_load`, :meth:`read` and :func:`merge_checkpoints` all skip
         them (and any rewrite/merge drops them), while a multi-host driver
         polling the file tail can tell a slow shard from a dead one.
+        Heartbeats flush but do not fsync — losing one to a crash only
+        ages the liveness view, never data.
         """
         with self.path.open("a") as f:
             f.write(json.dumps({"_hb": payload}, default=float) + "\n")
@@ -573,6 +648,11 @@ class MergeReport:
     merged: List[Path]                    # shards that contributed
     skipped: List[Tuple[Path, str]]       # (path, reason) set aside
     out: Optional[Path] = None
+    # task keys where two shards recorded *different* results — the
+    # symptom of a fingerprint or seed-gate bug (duplicate dispatch of a
+    # deterministic task must reproduce the identical record); last-wins
+    # still applies, but silently so no longer
+    conflicts: List[str] = field(default_factory=list)
 
     @property
     def n_records(self) -> int:
@@ -600,6 +680,8 @@ def _parse_checkpoint_shard(path: Path
         except json.JSONDecodeError:
             if i == len(lines) - 1:
                 continue                      # killed mid-write: drop it
+            if _hb_collision(lines, i):
+                continue        # torn by a concurrent heartbeat writer
             raise ValueError(f"corrupt line {i + 1}")
         if "_config" in rec:
             if fingerprint is not None and rec["_config"] != fingerprint:
@@ -612,10 +694,26 @@ def _parse_checkpoint_shard(path: Path
     return fingerprint, records
 
 
+def _records_conflict(a: Dict[str, Any], b: Dict[str, Any]) -> bool:
+    """Do two same-key records *disagree*?
+
+    A metrics-only record and its ``keep_mappings`` upgrade (identical
+    metrics, one extra ``mapping`` field) are the one sanctioned way
+    records legitimately differ, so mappings compare only when both
+    records carry one; every other field difference is a conflict.
+    """
+    ka, kb = set(a) - {"mapping"}, set(b) - {"mapping"}
+    if ka != kb or any(a[k] != b[k] for k in ka):
+        return True
+    return ("mapping" in a and "mapping" in b
+            and a["mapping"] != b["mapping"])
+
+
 def merge_checkpoints(shards: Sequence[Union[str, Path]],
                       out: Union[str, Path, None] = None,
                       expect_fingerprint: Optional[str] = None,
-                      verbose: bool = True) -> MergeReport:
+                      verbose: bool = True,
+                      on_conflict: str = "report") -> MergeReport:
     """Merge per-shard :class:`ResumableSweep` checkpoints into one.
 
     * every usable shard must carry the **same** config fingerprint (and
@@ -623,7 +721,14 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
       whole merge rather than mixing incompatible sweeps;
     * duplicate keys are **last-wins** in ``shards`` order (within a
       shard, in line order), mirroring the sweep's own append semantics —
-      overlapping shard ranges are therefore safe;
+      overlapping shard ranges are therefore safe; but two shards
+      recording *different* results for the same task key is the symptom
+      of a fingerprint or seed-gate bug (the supervisor's duplicate
+      dispatch can trigger it), so such keys are collected in
+      ``MergeReport.conflicts`` and reported (``on_conflict="report"``,
+      the default) or refused (``on_conflict="error"`` — what the
+      supervisor passes: a conflicted merge can never be bit-identical
+      to the clean run);
     * a corrupt or unreadable shard is **set aside** (skipped, reported in
       ``MergeReport.skipped``) instead of poisoning the others; source
       files are never modified.
@@ -633,6 +738,9 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
     ``run_dse(candidates, ..., checkpoint=out)`` reconstructs the full
     sweep, recomputing only tasks no shard covered.
     """
+    if on_conflict not in ("report", "error"):
+        raise ValueError(
+            f"on_conflict must be 'report' or 'error', got {on_conflict!r}")
     parsed: List[Tuple[Path, Optional[str], Dict[str, Dict]]] = []
     skipped: List[Tuple[Path, str]] = []
     for p in (Path(s) for s in shards):
@@ -658,10 +766,27 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
             f"fingerprints: {sorted(map(repr, fps))}")
     fingerprint = next(iter(fps))
     records: Dict[str, Dict] = {}
+    conflicts: List[str] = []
     for _p, _fp, recs in parsed:
-        records.update(recs)                  # later shards win duplicates
+        for k, r in recs.items():             # later shards win duplicates
+            prev = records.get(k)
+            if prev is not None and _records_conflict(prev, r):
+                conflicts.append(k)
+            records[k] = r
+    conflicts = sorted(set(conflicts))
+    if conflicts:
+        sample = ", ".join(conflicts[:3])
+        msg = (f"{len(conflicts)} task key(s) have conflicting records "
+               f"across shards (e.g. {sample}) — a fingerprint or "
+               f"seed-gate bug; duplicate dispatch of a deterministic "
+               f"task must reproduce identical records")
+        if on_conflict == "error":
+            raise ValueError(f"merge_checkpoints: {msg}")
+        _obs.vlog("merge", f"WARNING: {msg}", n_conflicts=len(conflicts))
+        _obs.metrics.counter("merge.conflicts").inc(len(conflicts))
     report = MergeReport(fingerprint=fingerprint, records=records,
-                         merged=[p for p, _, _ in parsed], skipped=skipped)
+                         merged=[p for p, _, _ in parsed], skipped=skipped,
+                         conflicts=conflicts)
     if out is not None:
         out = Path(out)
         out.parent.mkdir(parents=True, exist_ok=True)
@@ -671,9 +796,7 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
             {"_merged_from": [p.name for p in report.merged]}) + "\n"
         body = "".join(json.dumps({"_key": k, **r}, default=float) + "\n"
                        for k, r in records.items())
-        tmp = out.with_name(out.name + ".tmp")
-        tmp.write_text(header + prov + body)
-        tmp.replace(out)
+        _replace_durable(out, header + prov + body)
         report.out = out
     if verbose:
         note = f" ({len(skipped)} shard(s) set aside)" if skipped else ""
@@ -684,6 +807,85 @@ def merge_checkpoints(shards: Sequence[Union[str, Path]],
             n_records=len(records), n_shards=len(report.merged),
             n_skipped=len(skipped))
     return report
+
+
+# ---------------------------------------------------------------------------
+# Supervisor-facing sweep introspection (multi-host re-sharding)
+# ---------------------------------------------------------------------------
+
+def sweep_fingerprint(workloads: Dict[str, Graph], cfg: "_dse.DSEConfig",
+                      use_sa: bool = True) -> str:
+    """The checkpoint fingerprint a sweep of ``(workloads, cfg)`` stamps.
+
+    Public wrapper over the engine's internal fingerprint so the
+    multi-host supervisor (``repro.dist``) can assert every shard
+    artifact — and the final merge — against the one expected header
+    without running anything.
+    """
+    with ExplorationEngine(workloads, cfg) as eng:
+        return eng._fingerprint(use_sa)
+
+
+def remaining_candidate_indices(candidates: Sequence[ArchConfig],
+                                workloads: Dict[str, Graph],
+                                cfg: "_dse.DSEConfig",
+                                checkpoint: Union[str, Path],
+                                use_sa: bool = True,
+                                indices: Optional[Iterable[int]] = None,
+                                ) -> List[int]:
+    """Candidate indices whose (candidate x workload) tasks are NOT all
+    resumable from ``checkpoint`` — the re-shard unit of the multi-host
+    supervisor.
+
+    Mirrors the engine's resume gate exactly: a task counts as done only
+    when its record exists under the sweep's fingerprint, carries the
+    seed this sweep would derive (``use_sa`` sweeps), and has a mapping
+    when ``cfg.keep_mappings`` asks for one.  The checkpoint is parsed
+    tolerantly (a dead shard's torn tail or heartbeat-collision damage
+    just leaves those tasks "remaining"), and a missing / foreign-
+    fingerprint file leaves *everything* remaining — re-sharding is
+    always safe because reassigned tasks recompute bit-identically.
+    """
+    wl_names = sorted(workloads)
+    fingerprint = sweep_fingerprint(workloads, cfg, use_sa)
+    want = sorted(set(int(i) for i in indices)) if indices is not None \
+        else list(range(len(candidates)))
+    for i in want:
+        if not 0 <= i < len(candidates):
+            raise ValueError(f"candidate index {i} outside the grid "
+                             f"(0..{len(candidates) - 1})")
+    path = Path(checkpoint)
+    records: Dict[str, Dict[str, Any]] = {}
+    if path.exists():
+        try:
+            fp, records = _parse_checkpoint_shard(path)
+        except (ValueError, OSError):
+            # strict parse refused the file (mid-file hole): salvage what
+            # the tolerant reader can — lost records simply stay remaining
+            fp = None
+            sweep = ResumableSweep.read(path)
+            records = sweep.as_dict()
+            head = path.read_text().splitlines()[:1]
+            if head:
+                try:
+                    fp = json.loads(head[0]).get("_config")
+                except (json.JSONDecodeError, AttributeError):
+                    fp = None
+        if fp != fingerprint:
+            records = {}                      # foreign sweep: nothing reusable
+    out: List[int] = []
+    keep = cfg.keep_mappings
+    for ci in want:
+        arch = candidates[ci]
+        for wi, name in enumerate(wl_names):
+            rec = records.get(task_checkpoint_key(arch, name))
+            if rec is None \
+                    or (use_sa and rec.get("seed")
+                        != derive_task_seed(cfg.sa.seed, ci, wi)) \
+                    or (keep and "mapping" not in rec):
+                out.append(ci)
+                break
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -1206,6 +1408,8 @@ class ExplorationEngine:
     def run(self, candidates: Sequence[ArchConfig], use_sa: bool = True,
             screen_keep: Union[float, str] = 1.0,
             shard: Tuple[int, int] = (0, 1),
+            indices: Optional[Sequence[int]] = None,
+            shard_label: Optional[str] = None,
             ) -> List["_dse.DSEPoint"]:
         """Full sweep: optional screening stage, then (parallel) evaluation
         of this shard's (candidate x workload) tasks.
@@ -1231,12 +1435,36 @@ class ExplorationEngine:
         then bit-identical to the unsharded sweep.  Adaptive mode is
         incompatible with sharding: the gap rule consumes SA results as
         they arrive, which independent shards cannot agree on.
+
+        ``indices`` is the supervisor-style alternative to stride
+        sharding: evaluate exactly the listed global candidate indices
+        and run NO screening stage — the caller (``repro.dist``'s
+        supervisor) has already screened once and ships each shard an
+        explicit slice of the keep set.  Seeds still derive from the
+        *global* index, so any partition of the keep set across shards
+        merges bit-identically.  ``shard_label`` names this shard in
+        heartbeats/manifests when the ``i/n`` stride form doesn't apply.
         """
         candidates = list(candidates)
         si, sn = shard
         if sn < 1 or not 0 <= si < sn:
             raise ValueError(f"bad shard {si}/{sn}: need 0 <= i < n")
-        self._shard_label = f"{si}/{sn}"
+        if indices is not None:
+            if sn > 1:
+                raise ValueError("indices= is an explicit task list; "
+                                 "combining it with stride sharding "
+                                 f"({si}/{sn}) is ambiguous")
+            if screen_keep != 1.0:
+                raise ValueError(
+                    "indices= means screening already happened upstream; "
+                    "pass screen_keep=1.0 (the supervisor ships the keep "
+                    "set explicitly)")
+            idx = sorted(set(int(i) for i in indices))
+            for i in idx:
+                if not 0 <= i < len(candidates):
+                    raise ValueError(f"candidate index {i} outside the "
+                                     f"grid (0..{len(candidates) - 1})")
+        self._shard_label = shard_label or f"{si}/{sn}"
         indexed = list(enumerate(candidates))
         self.last_screen = None
         if _obs.enabled():
@@ -1279,6 +1507,13 @@ class ExplorationEngine:
             _obs.metrics.counter("screen.pruned").inc(len(indexed) - keep)
             self.last_screen = [screen_pts[i] for i in order]
             indexed = [indexed[i] for i in kept]
+        if indices is not None:
+            want = set(idx)
+            indexed = [(ci, arch) for ci, arch in indexed if ci in want]
+            self._log("explore",
+                      f"shard {self._shard_label}: {len(indexed)} assigned "
+                      f"candidates ({len(indexed) * len(self._wl_names)} "
+                      "tasks)")
         if sn > 1:
             mine = [(ci, arch) for ci, arch in indexed if ci % sn == si]
             self._log("explore",

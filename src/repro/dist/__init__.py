@@ -1,0 +1,43 @@
+"""Fault-tolerant multi-host sweep orchestration (the ROADMAP's
+"multi-host DSE orchestration as a service").
+
+Layers, bottom up:
+
+* :mod:`repro.dist.retrying` — the reusable retry/timeout/exponential-
+  backoff-with-jitter utility every dispatch path goes through
+  (deterministic under a seeded RNG, so chaos runs replay exactly);
+* :mod:`repro.dist.hosts` — the :class:`Host` launch protocol with a
+  :class:`LocalProcessHost` (subprocess ``--shard`` children) and a
+  :class:`ShellCommandHost` (SSH/SLURM-style ``{cmd}`` templates);
+* :mod:`repro.dist.faults` — the deterministic, seeded fault-injection
+  harness (kill-after-k, heartbeat stall, corrupt checkpoint tail,
+  duplicate dispatch, slow-host skew) hooked into the shard child via
+  environment variables;
+* :mod:`repro.dist.supervisor` — the sweep supervisor proper: dispatch
+  the shard set, poll shard checkpoints' ``_hb`` heartbeat lines for
+  liveness, declare hosts dead after a missed-heartbeat deadline,
+  re-shard a dead host's *remaining* tasks onto live hosts, merge with a
+  fingerprint assertion, all while journaling its own state to an
+  append-only resumable JSONL;
+* :mod:`repro.dist.shard_child` — the ``python -m`` entry point a host
+  launches for one shard.
+
+The CLI front end is ``python -m repro.launch.sweep_ctl``
+(launch / status / resume / merge).  The headline invariant, enforced by
+the chaos tests and the ``chaos-dse`` CI job: under every injected fault
+class the supervised sweep's merged checkpoint is bit-identical to a
+failure-free unsharded run of the same grid and seed.
+"""
+
+from .faults import FaultSpec, plan_faults
+from .hosts import Host, LocalProcessHost, ShellCommandHost
+from .retrying import RetryPolicy, retry_call
+from .supervisor import (ShardJob, Supervisor, SupervisorError, SweepSpec,
+                         quick_spec)
+
+__all__ = [
+    "FaultSpec", "plan_faults",
+    "Host", "LocalProcessHost", "ShellCommandHost",
+    "RetryPolicy", "retry_call",
+    "ShardJob", "Supervisor", "SupervisorError", "SweepSpec", "quick_spec",
+]

@@ -115,6 +115,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from repro.core.explore import ResumableSweep
+    from repro.dist.retrying import RetryPolicy, retry_call
     from repro.launch.cli import resolve_workloads, workload_bindings
     from repro.realize.calibrate import fit_overlay, save_overlay
     from repro.realize.measure import measure_candidate
@@ -126,8 +127,13 @@ def main() -> None:
     ckpt = Path(args.ckpt)
     if not ckpt.exists():
         raise SystemExit(f"checkpoint {ckpt} not found")
-    # parse the (potentially large) mapping checkpoint exactly once
-    ck_sweep = ResumableSweep.read(ckpt)
+    # parse the (potentially large) mapping checkpoint exactly once; the
+    # open retries briefly — on shared filesystems the sweep artifact may
+    # still be settling (NFS attribute-cache lag right after a merge)
+    ckpt_retry = RetryPolicy(max_attempts=3, base_s=0.2, max_s=2.0,
+                             retryable=(OSError,))
+    ck_sweep = retry_call(ResumableSweep.read, ckpt, policy=ckpt_retry,
+                          label="realize.read_ckpt")
     wl_names = sorted({rec["workload"]
                        for rec in ck_sweep.as_dict().values()
                        if "workload" in rec})
@@ -152,7 +158,8 @@ def main() -> None:
     out = Path(args.out)
     if args.force and out.exists():
         out.unlink()
-    sweep = ResumableSweep(out, fp)
+    sweep = retry_call(ResumableSweep, out, fp, policy=ckpt_retry,
+                       label="realize.open_out")
 
     t0 = time.time()
     for cand, plan in plans_for(cands, len(pool)):

@@ -324,7 +324,13 @@ def render_report(run: Union[str, Path, None] = None,
                 ("sa.swap_accepts", "RE swap accepts"),
                 ("engine.tasks", "tasks evaluated"),
                 ("engine.tasks_resumed", "tasks resumed"),
-                ("serve.requests", "serve requests replayed")):
+                ("serve.requests", "serve requests replayed"),
+                ("supervisor.launches", "supervisor launches"),
+                ("supervisor.retries", "supervisor retries"),
+                ("supervisor.deaths", "hosts declared dead"),
+                ("supervisor.reshards", "re-shard events"),
+                ("retry.attempts", "retried transient failures"),
+                ("merge.conflicts", "merge conflicts")):
             if c.get(key):
                 extras.append((label, f"{int(c[key])}"))
         if c.get("sa.proposed"):

@@ -1,0 +1,236 @@
+"""Checkpoint durability + liveness edge cases: fsync'd appends and
+atomic repairs, truncated-tail recovery (via the chaos harness's
+injector), heartbeat lines torn into records by concurrent writers,
+stale heartbeat clocks, and merge conflict detection."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.explore import (ResumableSweep, _hb_collision,
+                                _records_conflict, merge_checkpoints)
+from repro.dist.faults import corrupt_tail
+from repro.obs.report import parse_heartbeats, shard_progress
+
+FP = "dse:v2:test-fingerprint"
+
+
+def _write(path: Path, lines):
+    path.write_text("".join(json.dumps(l) + "\n" for l in lines))
+
+
+def _rec(key, energy=1.0, **kw):
+    return {"_key": key, "workload": "tf", "seed": 7, "energy_j": energy,
+            "delay_s": 0.5, **kw}
+
+
+def _fresh(tmp_path, name="sweep.jsonl", records=3):
+    p = tmp_path / name
+    sweep = ResumableSweep(p, FP)
+    for i in range(records):
+        sweep.add(f"k{i}", {"workload": "tf", "seed": 7,
+                            "energy_j": float(i), "delay_s": 0.5})
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Durability: fsync paths + truncated-tail recovery
+# ---------------------------------------------------------------------------
+
+def test_truncated_tail_recovered_and_repaired(tmp_path):
+    """The chaos injector's torn, newline-less tail (killed mid-write)
+    must cost at most the torn line — and resume must heal the file."""
+    p = _fresh(tmp_path)
+    corrupt_tail(p)                    # same injector the 'corrupt' fault uses
+    sweep = ResumableSweep(p, FP)
+    assert len(sweep) == 3             # every completed record survived
+    assert "torn-by-fault" not in p.read_text()   # repair rewrote the file
+    assert not p.with_name(p.name + ".tmp").exists()
+    # the repaired file ends in a newline, so the next append can't merge
+    # into a fragment
+    sweep.add("k3", {"workload": "tf", "seed": 7, "energy_j": 3.0,
+                     "delay_s": 0.5})
+    assert len(ResumableSweep(p, FP)) == 4
+
+
+def test_truncated_tail_then_append_without_reopen(tmp_path):
+    """A writer appending to a file with a torn tail (fault fired in a
+    sibling attempt) merges the fragment into its first record; resume
+    and merge both drop only the damaged line."""
+    p = _fresh(tmp_path)
+    corrupt_tail(p)
+    with p.open("a") as f:             # raw append, no repair pass
+        f.write(json.dumps(_rec("k9")) + "\n")
+    sweep = ResumableSweep.read(p)
+    assert set(sweep.as_dict()) == {"k0", "k1", "k2"}  # merged line dropped
+
+
+def test_fsync_can_be_disabled(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CKPT_FSYNC", "0")
+    p = _fresh(tmp_path)
+    assert len(ResumableSweep(p, FP)) == 3
+
+
+# ---------------------------------------------------------------------------
+# _hb lines torn into records by concurrent writers
+# ---------------------------------------------------------------------------
+
+def _hb_line(done=1):
+    return {"_hb": {"shard": "s0", "stage": "dse", "done": done,
+                    "total": 4, "wall_s": 1.0, "t": 1e9}}
+
+
+def test_hb_interleaved_mid_record_forgiven_on_resume(tmp_path):
+    """A heartbeat writer racing a record append can tear one line in
+    two; the damage is adjacent to a heartbeat, so ONLY the damaged line
+    is dropped (the seed gate recomputes it) — not the whole file."""
+    p = tmp_path / "s.jsonl"
+    good = [{"_config": FP}, _rec("k0"), _hb_line(1), _rec("k1")]
+    text = "".join(json.dumps(l) + "\n" for l in good)
+    # a half-record jammed between the heartbeat and k1
+    lines = text.splitlines()
+    lines.insert(3, '{"_key": "k-torn", "energy_j": 1.')
+    p.write_text("".join(l + "\n" for l in lines))
+    sweep = ResumableSweep(p, FP)
+    assert set(sweep.as_dict()) == {"k0", "k1"}
+    assert "k-torn" not in p.read_text()          # repaired
+
+
+def test_hb_marker_inside_torn_line_forgiven(tmp_path):
+    p = tmp_path / "s.jsonl"
+    lines = [json.dumps({"_config": FP}), json.dumps(_rec("k0")),
+             '{"_hb": {"shard": "s0", "done":',      # torn heartbeat itself
+             json.dumps(_rec("k1"))]
+    p.write_text("".join(l + "\n" for l in lines))
+    sweep = ResumableSweep(p, FP)
+    assert set(sweep.as_dict()) == {"k0", "k1"}
+
+
+def test_corrupt_line_far_from_heartbeats_still_discards(tmp_path):
+    """The forgiveness is scoped: a mid-file hole NOT attributable to a
+    heartbeat collision still means unknown records were lost, and the
+    whole checkpoint is set aside."""
+    p = tmp_path / "s.jsonl"
+    lines = [json.dumps({"_config": FP}), json.dumps(_rec("k0")),
+             "garbage not json", json.dumps(_rec("k1"))]
+    p.write_text("".join(l + "\n" for l in lines))
+    sweep = ResumableSweep(p, FP)
+    assert len(sweep) == 0                         # discarded...
+    assert p.with_name(p.name + ".bak").exists()   # ...but preserved
+
+
+def test_hb_collision_helper_scoping():
+    lines = ['{"_key": "a"}', "torn", json.dumps(_hb_line())]
+    assert _hb_collision(lines, 1)                 # hb neighbor
+    lines = ['{"_key": "a"}', "torn", '{"_key": "b"}']
+    assert not _hb_collision(lines, 1)             # no hb anywhere near
+    assert _hb_collision(['x {"_hb": 1}'], 0)      # marker in the line
+
+
+def test_hb_interleave_forgiven_by_merge(tmp_path):
+    """merge_checkpoints applies the same forgiveness — a shard torn by
+    its own heartbeat writer contributes its surviving records instead
+    of being set aside."""
+    a = tmp_path / "a.jsonl"
+    lines = [json.dumps({"_config": FP}), json.dumps(_rec("k0")),
+             json.dumps(_hb_line()), '{"_key": "k-torn", "ene',
+             json.dumps(_rec("k1"))]
+    a.write_text("".join(l + "\n" for l in lines))
+    b = tmp_path / "b.jsonl"
+    _write(b, [{"_config": FP}, _rec("k2")])
+    report = merge_checkpoints([a, b], verbose=False)
+    assert not report.skipped
+    assert set(report.records) == {"k0", "k1", "k2"}
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat clock edge cases (liveness must not trust remote clocks)
+# ---------------------------------------------------------------------------
+
+def test_shard_progress_stale_past_clock(tmp_path):
+    """A heartbeat stamped by a badly skewed (past) clock shows a huge
+    age — the supervisor ignores it and uses its own receipt times."""
+    p = tmp_path / "s.jsonl"
+    hb = _hb_line()
+    hb["_hb"]["t"] = 1000.0            # ancient wall clock
+    _write(p, [{"_config": FP}, _rec("k0"), hb])
+    (row,) = shard_progress([p], now=2000.0)
+    assert row["hb_age_s"] == pytest.approx(1000.0)
+    assert row["records"] == 1
+
+
+def test_shard_progress_future_clock_clamps_to_zero(tmp_path):
+    p = tmp_path / "s.jsonl"
+    hb = _hb_line()
+    hb["_hb"]["t"] = 5000.0            # "from the future"
+    _write(p, [{"_config": FP}, _rec("k0"), hb])
+    (row,) = shard_progress([p], now=2000.0)
+    assert row["hb_age_s"] == 0.0      # clamped, never negative
+
+
+def test_shard_progress_dead_before_first_heartbeat(tmp_path):
+    """A shard that died before ever heartbeating (header-only file, or
+    no file at all) must still render a row — liveness falls back to the
+    launch time upstream."""
+    header_only = tmp_path / "s0.jsonl"
+    _write(header_only, [{"_config": FP}])
+    missing = tmp_path / "s1.jsonl"
+    rows = shard_progress([header_only, missing], now=2000.0)
+    assert [r["records"] for r in rows] == [0, 0]
+    assert all(r["hb_age_s"] is None for r in rows)
+    assert rows[0]["shard"] == "s0.jsonl"          # falls back to filename
+    assert parse_heartbeats(missing) == (0, None)
+
+
+def test_parse_heartbeats_ignores_torn_lines(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text(json.dumps(_rec("k0")) + "\n" + '{"_hb": torn')
+    assert parse_heartbeats(p) == (1, None)
+
+
+# ---------------------------------------------------------------------------
+# Merge conflict detection (silent last-wins no more)
+# ---------------------------------------------------------------------------
+
+def test_merge_reports_conflicting_duplicates(tmp_path):
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    _write(a, [{"_config": FP}, _rec("k0", energy=1.0), _rec("k1")])
+    _write(b, [{"_config": FP}, _rec("k0", energy=2.0)])   # different!
+    report = merge_checkpoints([a, b], verbose=False)
+    assert report.conflicts == ["k0"]
+    assert report.records["k0"]["energy_j"] == 2.0         # still last-wins
+
+
+def test_merge_on_conflict_error_raises(tmp_path):
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    _write(a, [{"_config": FP}, _rec("k0", energy=1.0)])
+    _write(b, [{"_config": FP}, _rec("k0", energy=2.0)])
+    with pytest.raises(ValueError, match="conflict"):
+        merge_checkpoints([a, b], verbose=False, on_conflict="error")
+    with pytest.raises(ValueError):
+        merge_checkpoints([a], on_conflict="bogus")
+
+
+def test_merge_identical_duplicates_are_not_conflicts(tmp_path):
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    _write(a, [{"_config": FP}, _rec("k0")])
+    _write(b, [{"_config": FP}, _rec("k0")])
+    report = merge_checkpoints([a, b], verbose=False, on_conflict="error")
+    assert report.conflicts == []
+    assert report.n_records == 1
+
+
+def test_records_conflict_semantics():
+    base = {"workload": "tf", "seed": 7, "energy_j": 1.0}
+    assert not _records_conflict(base, dict(base))
+    assert _records_conflict(base, {**base, "energy_j": 2.0})
+    assert _records_conflict(base, {**base, "extra": 1})
+    # a keep_mappings upgrade (same metrics, one side carries the
+    # mapping) is NOT a conflict...
+    assert not _records_conflict(base, {**base, "mapping": {"m": 1}})
+    # ...but two different mappings for the same task are
+    assert _records_conflict({**base, "mapping": {"m": 1}},
+                             {**base, "mapping": {"m": 2}})
+    assert not _records_conflict({**base, "mapping": {"m": 1}},
+                                 {**base, "mapping": {"m": 1}})

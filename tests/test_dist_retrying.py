@@ -1,0 +1,161 @@
+"""repro.dist.retrying: deterministic jittered backoff, deadline budget,
+non-retryable passthrough, exhaustion semantics."""
+
+import itertools
+
+import pytest
+
+from repro.dist.retrying import RetryPolicy, backoff_delays, retry_call
+
+
+class Boom(OSError):
+    pass
+
+
+class NotRetryable(ValueError):
+    pass
+
+
+def _take(gen, n):
+    return list(itertools.islice(gen, n))
+
+
+# ---------------------------------------------------------------------------
+# backoff_delays
+# ---------------------------------------------------------------------------
+
+def test_backoff_exponential_envelope():
+    pol = RetryPolicy(base_s=0.1, factor=2.0, max_s=0.5, jitter=0.0)
+    assert _take(backoff_delays(pol, seed=0), 5) == \
+        pytest.approx([0.1, 0.2, 0.4, 0.5, 0.5])
+
+
+def test_backoff_jitter_stays_in_band():
+    pol = RetryPolicy(base_s=1.0, factor=1.0, max_s=10.0, jitter=0.25)
+    for d in _take(backoff_delays(pol, seed=7), 50):
+        assert 0.75 <= d <= 1.25
+
+
+def test_backoff_jitter_deterministic_per_seed():
+    pol = RetryPolicy(jitter=0.5)
+    a = _take(backoff_delays(pol, seed=11), 8)
+    b = _take(backoff_delays(pol, seed=11), 8)
+    c = _take(backoff_delays(pol, seed=12), 8)
+    assert a == b                      # same seed replays exactly
+    assert a != c                      # different seed, different schedule
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# retry_call
+# ---------------------------------------------------------------------------
+
+def test_retry_recovers_after_transient_failures():
+    calls = {"n": 0}
+    slept = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise Boom("transient")
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=5, retryable=(Boom,), jitter=0.0,
+                      base_s=0.01)
+    assert retry_call(flaky, policy=pol, sleep=slept.append) == "ok"
+    assert calls["n"] == 3
+    assert len(slept) == 2
+
+
+def test_retry_sleep_schedule_is_seeded():
+    def always(): raise Boom("no")
+    pol = RetryPolicy(max_attempts=4, retryable=(Boom,), base_s=0.1,
+                      jitter=0.5)
+    runs = []
+    for _ in range(2):
+        slept = []
+        with pytest.raises(Boom):
+            retry_call(always, policy=pol, seed=5, sleep=slept.append)
+        runs.append(slept)
+    assert runs[0] == runs[1]
+    assert len(runs[0]) == 3           # max_attempts - 1 sleeps
+    slept2 = []
+    with pytest.raises(Boom):
+        retry_call(always, policy=pol, seed=6, sleep=slept2.append)
+    assert slept2 != runs[0]
+
+
+def test_non_retryable_propagates_immediately():
+    calls = {"n": 0}
+
+    def bad():
+        calls["n"] += 1
+        raise NotRetryable("logic bug")
+
+    pol = RetryPolicy(max_attempts=5, retryable=(Boom,))
+    with pytest.raises(NotRetryable):
+        retry_call(bad, policy=pol, sleep=lambda s: None)
+    assert calls["n"] == 1             # never retried
+
+
+def test_exhaustion_reraises_last_original_exception():
+    errs = [Boom("first"), Boom("second"), Boom("third")]
+
+    def failing():
+        raise errs.pop(0)
+
+    pol = RetryPolicy(max_attempts=3, retryable=(Boom,), jitter=0.0)
+    with pytest.raises(Boom, match="third"):
+        retry_call(failing, policy=pol, sleep=lambda s: None)
+
+
+def test_deadline_bounds_total_budget_on_injected_clock():
+    now = {"t": 0.0}
+
+    def clock():
+        return now["t"]
+
+    def sleep(s):
+        now["t"] += s
+
+    def always():
+        now["t"] += 1.0                # each attempt costs 1s of "work"
+        raise Boom("down")
+
+    pol = RetryPolicy(max_attempts=100, retryable=(Boom,), base_s=1.0,
+                      factor=1.0, jitter=0.0, deadline_s=4.5)
+    with pytest.raises(Boom):
+        retry_call(always, policy=pol, sleep=sleep, clock=clock)
+    # attempts cost 1s work + 1s sleep each; the deadline stops the loop
+    # instead of letting all 100 attempts run
+    assert now["t"] < 10.0
+
+
+def test_on_retry_observer_sees_each_failure():
+    seen = []
+
+    def flaky():
+        if len(seen) < 2:
+            raise Boom("x")
+        return 42
+
+    pol = RetryPolicy(max_attempts=5, retryable=(Boom,), jitter=0.0,
+                      base_s=0.01)
+    out = retry_call(flaky, policy=pol, sleep=lambda s: None,
+                     on_retry=lambda a, d, e: seen.append((a, d)))
+    assert out == 42
+    assert [a for a, _ in seen] == [0, 1]
+
+
+def test_args_and_kwargs_pass_through():
+    pol = RetryPolicy(max_attempts=2, retryable=(Boom,))
+    assert retry_call(lambda a, b=0: a + b, 2, policy=pol, b=3,
+                      sleep=lambda s: None) == 5
